@@ -1,0 +1,78 @@
+"""Fig 4: tile-size autotuner integration.
+
+Per benchmark program, speedup over the compiler default (= the analytical
+model's argmin tile per kernel) for:
+  * Exhaustive          — measure every tile on hardware,
+  * Learned model 1     — learned model replaces the analytical model in the
+                          compiler (top-1, no hardware),
+  * Learned model 10    — learned model proposes top-10, hardware picks,
+  * Analytical 10       — analytical model proposes top-10, hardware picks.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (
+    MAX_NODES,
+    build_world,
+    csv_row,
+    paper_tile_model,
+    steps,
+    train_cost_model,
+)
+from repro.autotuner import autotune_program_tiles
+from repro.core.analytical import AnalyticalModel
+from repro.core.evaluate import analytical_tile_scorer, learned_tile_scorer
+from repro.data.fusion import apply_fusion, default_fusion
+
+MAX_CONFIGS = 24
+
+
+def run() -> list[str]:
+    world = build_world()
+    mc = paper_tile_model()
+    params = train_cost_model(world, mc, task="tile", method="random",
+                              n_steps=steps(1500))
+    learned = learned_tile_scorer(params, mc, world.normalizers["random"],
+                                  max_nodes=MAX_NODES, chunk=64)
+    analytical = analytical_tile_scorer(AnalyticalModel())
+
+    rows = []
+    test_programs = world.splits["random"]["test"][:6]
+    by_name = {p.program: p for p in world.programs}
+    for prog_name in test_programs:
+        prog = by_name[prog_name]
+        kernels = apply_fusion(prog, default_fusion(prog))
+        kernels = [k for k in kernels if k.num_nodes <= MAX_NODES]
+        if not kernels:
+            continue
+        default = autotune_program_tiles(kernels, world.sim,
+                                         scorer=analytical, top_k=1,
+                                         max_configs=MAX_CONFIGS)
+        ex = autotune_program_tiles(kernels, world.sim, scorer=None,
+                                    max_configs=MAX_CONFIGS)
+        l1 = autotune_program_tiles(kernels, world.sim, scorer=learned,
+                                    top_k=1, max_configs=MAX_CONFIGS)
+        l10 = autotune_program_tiles(kernels, world.sim, scorer=learned,
+                                     top_k=10, max_configs=MAX_CONFIGS)
+        a10 = autotune_program_tiles(kernels, world.sim, scorer=analytical,
+                                     top_k=10, max_configs=MAX_CONFIGS)
+        d = default.total_runtime
+        rows.append(csv_row(
+            f"fig4.{prog_name}",
+            exhaustive=d / ex.total_runtime,
+            learned1=d / l1.total_runtime,
+            learned10=d / l10.total_runtime,
+            analytical10=d / a10.total_runtime,
+            hw_evals_exhaustive=ex.hardware_evals,
+            hw_evals_learned10=l10.hardware_evals))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

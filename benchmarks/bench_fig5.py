@@ -1,0 +1,90 @@
+"""Fig 5: fusion autotuner with a hardware-time budget.
+
+Per program, best speedup over the compiler-default fusion config for:
+  * HW 10m          — simulated annealing directly on hardware,
+  * CM + HW 1m      — anneal on the learned cost model, validate the top
+                      configs within a 10x smaller hardware budget,
+  * CM + HW 10m     — same with the full budget.
+Hardware minutes are simulated (eval_seconds per config), scaled 1:10 to
+keep CPU time sane — the comparison is budget-relative either way. Repeated
+3x (different SA seeds); reports median/min/max like the figure's bars.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (
+    MAX_NODES,
+    build_world,
+    csv_row,
+    paper_fusion_model,
+    steps,
+    train_cost_model,
+)
+from repro.autotuner import simulated_annealing_fusion
+from repro.core.evaluate import make_predict_fn, predict_kernels
+
+EVAL_SECONDS = 2.0
+HW_BUDGET_10M = 60.0      # '10 minutes' at 1:10 scale
+HW_BUDGET_1M = 6.0
+REPEATS = 3
+
+
+def run() -> list[str]:
+    world = build_world()
+    mc = paper_fusion_model()
+    params = train_cost_model(world, mc, task="fusion", method="random",
+                              n_steps=steps(1500))
+    predict_fn = make_predict_fn(mc)
+    norm = world.normalizers["random"]
+
+    def model_cost(kernels):
+        kernels = [k for k in kernels if k.num_nodes <= MAX_NODES]
+        if not kernels:
+            return 0.0
+        scores = predict_kernels(params, mc, kernels, norm,
+                                 max_nodes=MAX_NODES, chunk=64,
+                                 predict_fn=predict_fn)
+        return float(np.sum(np.exp(scores)))
+
+    rows = []
+    # programs that gain from fusion autotuning (paper picks such a set)
+    candidates = world.splits["random"]["test"] + \
+        world.splits["random"]["val"]
+    by_name = {p.program: p for p in world.programs}
+    for prog_name in candidates[:5]:
+        prog = by_name[prog_name]
+        res = {"hw10": [], "cm1": [], "cm10": []}
+        for rep in range(REPEATS):
+            r_hw = simulated_annealing_fusion(
+                prog, world.sim, model_cost=None,
+                hardware_budget_s=HW_BUDGET_10M,
+                eval_seconds=EVAL_SECONDS, seed=rep)
+            r_cm1 = simulated_annealing_fusion(
+                prog, world.sim, model_cost=model_cost,
+                hardware_budget_s=HW_BUDGET_1M, model_steps=250,
+                eval_seconds=EVAL_SECONDS, seed=rep)
+            r_cm10 = simulated_annealing_fusion(
+                prog, world.sim, model_cost=model_cost,
+                hardware_budget_s=HW_BUDGET_10M, model_steps=250,
+                eval_seconds=EVAL_SECONDS, seed=rep)
+            res["hw10"].append(r_hw.speedup)
+            res["cm1"].append(r_cm1.speedup)
+            res["cm10"].append(r_cm10.speedup)
+        rows.append(csv_row(
+            f"fig5.{prog_name}",
+            hw10_median=float(np.median(res["hw10"])),
+            hw10_min=float(np.min(res["hw10"])),
+            hw10_max=float(np.max(res["hw10"])),
+            cm_hw1_median=float(np.median(res["cm1"])),
+            cm_hw10_median=float(np.median(res["cm10"]))))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

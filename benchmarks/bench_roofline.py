@@ -1,0 +1,112 @@
+"""Roofline table (deliverable g): three terms per (arch × shape) from the
+dry-run + scan-corrected probe artifacts. Reads experiments/dryrun and
+experiments/probes; writes experiments/roofline.md and prints CSV."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import csv_row
+from repro.roofline.analysis import ROOFLINE_HW, RooflineRow, \
+    analytic_memory_bytes, model_flops, render_markdown
+
+EXP = os.path.join(os.path.dirname(__file__), "..", "experiments")
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+
+def corrected_rows(mesh_name: str = "pod16x16") -> list[RooflineRow]:
+    from repro.models import SHAPES, registry
+    from repro.models.lm import analytic_param_count
+    rows = []
+    dr_dir = os.path.join(EXP, "dryrun")
+    pr_dir = os.path.join(EXP, "probes")
+    if not os.path.isdir(dr_dir):
+        return rows
+    for fname in sorted(os.listdir(dr_dir)):
+        if not fname.startswith(mesh_name) or not fname.endswith(".json"):
+            continue
+        with open(os.path.join(dr_dir, fname)) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        arch, shape_name = rec["arch"], rec["shape"]
+        cfg = registry.get_config(arch)
+        shape = SHAPES[shape_name]
+        probe_path = os.path.join(pr_dir, fname)
+        corrected = None
+        if os.path.exists(probe_path):
+            with open(probe_path) as f:
+                corrected = json.load(f).get("corrected")
+        devices = rec.get("devices", 256)
+        if corrected:
+            flops_dev = corrected["flops"]
+            bytes_dev = corrected["bytes"]
+            coll_dev = corrected["collective_total"]
+            note = "scan-corrected (probes)"
+        else:
+            flops_dev = rec["cost"].get("flops", 0.0)
+            bytes_dev = rec["cost"].get("bytes accessed", 0.0)
+            coll_dev = sum(v for k, v in rec["collectives"].items()
+                           if k in _COLL)
+            note = "RAW (bodies-once; no probe record)"
+        n_params = analytic_param_count(cfg)
+        compute_s = flops_dev / ROOFLINE_HW["peak_flops"]
+        # HLO bytes = unfused upper bound; fused estimate drives dominance
+        mem_fused = analytic_memory_bytes(cfg, shape, n_params)
+        memory_s = min(bytes_dev, max(mem_fused, 0.0)) / \
+            ROOFLINE_HW["hbm_bw"]
+        memory_upper_s = bytes_dev / ROOFLINE_HW["hbm_bw"]
+        collective_s = coll_dev / ROOFLINE_HW["ici_bw"]
+        terms = {"compute": compute_s, "memory": memory_s,
+                 "collective": collective_s}
+        dominant = max(terms, key=terms.get)
+        mf = model_flops(cfg, shape, n_params)
+        hlo_total = flops_dev * devices
+        m = rec.get("memory", {})
+        peak = max(m.get("peak_memory_in_bytes", 0),
+                   m.get("argument_size_in_bytes", 0))
+        rows.append(RooflineRow(
+            arch=arch, shape=shape_name, mesh=rec["mesh"], devices=devices,
+            compute_s=compute_s, memory_s=memory_s,
+            collective_s=collective_s, dominant=dominant,
+            hlo_flops_total=hlo_total, model_flops=mf,
+            useful_ratio=mf / hlo_total if hlo_total else float("nan"),
+            peak_mem_gb=peak / 1024**3,
+            fits_hbm=peak <= ROOFLINE_HW["hbm_bytes"], note=note,
+            memory_upper_s=memory_upper_s))
+    return rows
+
+
+def run() -> list[str]:
+    rows = corrected_rows()
+    out = []
+    for r in sorted(rows, key=lambda r: (r.arch, r.shape)):
+        out.append(csv_row(
+            f"roofline.{r.arch}.{r.shape}",
+            compute_s=r.compute_s, memory_s=r.memory_s,
+            collective_s=r.collective_s, bound=r.dominant,
+            useful_flops_pct=100 * r.useful_ratio,
+            roofline_fraction=r.roofline_fraction,
+            peak_mem_gb=r.peak_mem_gb,
+            memory_upper_s=r.memory_upper_s, note=r.note))
+    if rows:
+        md = render_markdown(rows)
+        with open(os.path.join(EXP, "roofline.md"), "w") as f:
+            f.write(md + "\n")
+    else:
+        out.append("roofline.SKIPPED,reason=no dryrun records "
+                   "(run python -m repro.launch.dryrun first)")
+    return out
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

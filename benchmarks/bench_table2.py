@@ -1,0 +1,113 @@
+"""Table 2: learned vs analytical on the randomly split test set.
+
+Left half — tile-size task: per-program Tile-Size APE + Kendall τ.
+Right half — fusion task: per-program MAPE (runtimes ≥ 5 'µs'-equivalent
+threshold) + Kendall τ. The threshold is scaled to this corpus's runtime
+distribution (the paper uses 5µs on its own; we use the median so the
+"large kernels" emphasis carries over).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (
+    analytical_fusion_predictor,
+    build_world,
+    csv_row,
+    paper_fusion_model,
+    paper_tile_model,
+    steps,
+    train_cost_model,
+)
+from repro.core.analytical import AnalyticalModel
+from repro.core.evaluate import (
+    analytical_tile_scorer,
+    eval_fusion_task,
+    eval_tile_task,
+    learned_runtime_predictor,
+    learned_tile_scorer,
+)
+
+MIN_RUNTIME = 5e-6
+
+
+def run(method: str = "random") -> list[str]:
+    world = build_world()
+    rows = []
+
+    # ---------------- tile task
+    mc_tile = paper_tile_model()
+    params = train_cost_model(world, mc_tile, task="tile", method=method,
+                              n_steps=steps(3000))
+    learned = eval_tile_task(
+        world.tile_subset(method, "test"),
+        learned_tile_scorer(params, mc_tile, world.normalizers[method],
+                            max_nodes=mc_tile.max_nodes, chunk=64))
+    ana = eval_tile_task(world.tile_subset(method, "test"),
+                         analytical_tile_scorer(AnalyticalModel()))
+    for prog in sorted(learned["per_program"]):
+        rows.append(csv_row(
+            f"table2.tile.{method}.{prog}",
+            learned_ape=learned["per_program"][prog]["ape"],
+            analytical_ape=ana["per_program"][prog]["ape"],
+            learned_tau=learned["per_program"][prog]["kendall"],
+            analytical_tau=ana["per_program"][prog]["kendall"]))
+    rows.append(csv_row(f"table2.tile.{method}.MEAN",
+                        learned_ape=learned["mean_ape"],
+                        analytical_ape=ana["mean_ape"],
+                        learned_tau=learned["mean_kendall"],
+                        analytical_tau=ana["mean_kendall"]))
+    rows.append(csv_row(f"table2.tile.{method}.MEDIAN",
+                        learned_ape=learned["median_ape"],
+                        analytical_ape=ana["median_ape"],
+                        learned_tau=learned["median_kendall"],
+                        analytical_tau=ana["median_kendall"]))
+
+    # ---------------- fusion task
+    mc_f = paper_fusion_model()
+    params_f = train_cost_model(world, mc_f, task="fusion", method=method,
+                                n_steps=steps(3000))
+    pred = learned_runtime_predictor(params_f, mc_f,
+                                     world.normalizers[method],
+                                     max_nodes=mc_f.max_nodes, chunk=64)
+    fl = eval_fusion_task(world.fusion_subset(method, "test"), pred,
+                          min_runtime=MIN_RUNTIME)
+    fa = eval_fusion_task(world.fusion_subset(method, "test"),
+                          analytical_fusion_predictor(world, method),
+                          min_runtime=MIN_RUNTIME)
+    for prog in sorted(fl["per_program"]):
+        if prog not in fa["per_program"]:
+            continue
+        rows.append(csv_row(
+            f"table2.fusion.{method}.{prog}",
+            learned_mape=fl["per_program"][prog]["mape"],
+            analytical_mape=fa["per_program"][prog]["mape"],
+            learned_tau=fl["per_program"][prog]["kendall"],
+            analytical_tau=fa["per_program"][prog]["kendall"]))
+    rows.append(csv_row(f"table2.fusion.{method}.MEAN",
+                        learned_mape=fl["mean_mape"],
+                        analytical_mape=fa["mean_mape"],
+                        learned_tau=fl["mean_kendall"],
+                        analytical_tau=fa["mean_kendall"]))
+    rows.append(csv_row(f"table2.fusion.{method}.MEDIAN",
+                        learned_mape=fl["median_mape"],
+                        analytical_mape=fa["median_mape"],
+                        learned_tau=fl["median_kendall"],
+                        analytical_tau=fa["median_kendall"]))
+    # small-kernel slice (paper reports <5µs separately)
+    fl_small = eval_fusion_task(world.fusion_subset(method, "test"), pred)
+    fa_small = eval_fusion_task(world.fusion_subset(method, "test"),
+                                analytical_fusion_predictor(world, method))
+    rows.append(csv_row(f"table2.fusion.{method}.ALL_KERNELS",
+                        learned_mape=fl_small["mean_mape"],
+                        analytical_mape=fa_small["mean_mape"]))
+    return rows
+
+
+def main():
+    for r in run("random"):
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Table 3: graph-feature & loss ablations (each row = one change to the
+'vanilla' configuration; GraphSAGE + per-node reduction like §6.1).
+
+Rows: vanilla / undirected / +static-perf-as-node-features /
++static-perf-in-kernel-embedding / tile-size-moved-to-kernel-embedding /
+MSE-instead-of-rank (tile only).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import (
+    MAX_NODES,
+    build_world,
+    csv_row,
+    steps,
+    train_cost_model,
+)
+from repro.core.evaluate import (
+    eval_fusion_task,
+    eval_tile_task,
+    learned_runtime_predictor,
+    learned_tile_scorer,
+)
+from repro.core.model import CostModelConfig
+
+N_STEPS = 700
+
+
+def _vanilla() -> CostModelConfig:
+    # vanilla = directed, NO static perf features, tile as node feature
+    return CostModelConfig(gnn="graphsage", reduction="per_node",
+                           hidden_dim=64, opcode_embed_dim=16,
+                           max_nodes=MAX_NODES, dropout=0.1,
+                           include_static_perf=False,
+                           kernel_feat_mode="node")
+
+
+VARIANTS = {
+    "vanilla": {},
+    "undirected": {"directed": False},
+    "static_perf_node": {"include_static_perf": True},
+    "static_perf_kernel_emb": {"include_static_perf": True,
+                               "kernel_feat_mode": "kernel"},
+    "tile_in_kernel_emb": {"kernel_feat_mode": "kernel"},
+}
+
+
+def run() -> list[str]:
+    world = build_world()
+    rows = []
+    n = steps(N_STEPS)
+    for name, delta in VARIANTS.items():
+        mc = dataclasses.replace(_vanilla(), **delta)
+        # tile task
+        params = train_cost_model(world, mc, task="tile", method="random",
+                                  n_steps=n, tag=f"t3.{name}")
+        res = eval_tile_task(
+            world.tile_subset("random", "test"),
+            learned_tile_scorer(params, mc, world.normalizers["random"],
+                                max_nodes=MAX_NODES, chunk=64))
+        # fusion task
+        params_f = train_cost_model(world, mc, task="fusion",
+                                    method="random", n_steps=n,
+                                    tag=f"t3f.{name}")
+        pred = learned_runtime_predictor(params_f, mc,
+                                         world.normalizers["random"],
+                                         max_nodes=MAX_NODES, chunk=64)
+        resf = eval_fusion_task(world.fusion_subset("random", "test"), pred,
+                                min_runtime=5e-6)
+        rows.append(csv_row(f"table3.{name}",
+                            tile_median_ape=res["median_ape"],
+                            tile_mean_ape=res["mean_ape"],
+                            fusion_median_mape=resf["median_mape"],
+                            fusion_mean_mape=resf["mean_mape"]))
+
+    # 'MSE loss (not rank)' row — tile task trained on absolute log-runtime
+    mc = _vanilla()
+    params = train_cost_model(world, mc, task="tile_mse", method="random",
+                              n_steps=n, tag="t3.mse")
+    res = eval_tile_task(
+        world.tile_subset("random", "test"),
+        learned_tile_scorer(params, mc, world.normalizers["random"],
+                            max_nodes=MAX_NODES, chunk=64))
+    rows.append(csv_row("table3.mse_loss_not_rank",
+                        tile_median_ape=res["median_ape"],
+                        tile_mean_ape=res["mean_ape"],
+                        fusion_median_mape=float("nan"),
+                        fusion_mean_mape=float("nan")))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Table 4: model-architecture grid — {no GNN, GraphSAGE, GAT} ×
+{per-node, column-wise, LSTM, Transformer} on both tasks.
+
+Settings follow §6.2: direction-aware, static perf (and tile) as node
+features; rank loss for tile, log-MSE for fusion.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (
+    MAX_NODES,
+    build_world,
+    csv_row,
+    steps,
+    train_cost_model,
+)
+from repro.core.evaluate import (
+    eval_fusion_task,
+    eval_tile_task,
+    learned_runtime_predictor,
+    learned_tile_scorer,
+)
+from repro.core.model import CostModelConfig
+
+GNNS = ("none", "graphsage", "gat")
+REDUCTIONS = ("per_node", "column_wise", "lstm", "transformer")
+N_STEPS = 500
+
+
+def run() -> list[str]:
+    world = build_world()
+    rows = []
+    n = steps(N_STEPS)
+    for gnn in GNNS:
+        for red in REDUCTIONS:
+            mc = CostModelConfig(gnn=gnn, reduction=red, hidden_dim=48,
+                                 opcode_embed_dim=16, max_nodes=MAX_NODES,
+                                 dropout=0.1, gat_heads=2)
+            lr = 5e-4 if gnn == "gat" else 2e-3    # GATs are LR-sensitive
+            params = train_cost_model(world, mc, task="tile",
+                                      method="random", n_steps=n, lr=lr,
+                                      tag="t4")
+            res = eval_tile_task(
+                world.tile_subset("random", "test"),
+                learned_tile_scorer(params, mc,
+                                    world.normalizers["random"],
+                                    max_nodes=MAX_NODES, chunk=64))
+            apes = [m["ape"] for m in res["per_program"].values()]
+
+            params_f = train_cost_model(world, mc, task="fusion",
+                                        method="random", n_steps=n, lr=lr,
+                                        tag="t4f")
+            pred = learned_runtime_predictor(params_f, mc,
+                                             world.normalizers["random"],
+                                             max_nodes=MAX_NODES, chunk=64)
+            resf = eval_fusion_task(world.fusion_subset("random", "test"),
+                                    pred, min_runtime=5e-6)
+            mapes = [m["mape"] for m in resf["per_program"].values()]
+            rows.append(csv_row(
+                f"table4.{gnn}.{red}",
+                tile_ape=res["mean_ape"],
+                tile_ape_std=float(np.std(apes)) if apes else float("nan"),
+                fusion_mape=resf["mean_mape"],
+                fusion_mape_std=float(np.std(mapes)) if mapes
+                else float("nan")))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

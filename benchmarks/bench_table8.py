@@ -1,0 +1,20 @@
+"""Table 8: same evaluation as Table 2 but on the *manual* split — whole
+program families (convdraw, embedding) held out of training. Expectation
+per the paper: the learned model degrades on tile ranking (test programs
+chosen for dissimilarity) but still beats the analytical model on fusion
+MAPE."""
+from benchmarks import bench_table2
+
+
+def run():
+    return [r.replace("table2.", "table8.", 1)
+            for r in bench_table2.run("manual")]
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,184 @@
+"""Shared benchmark world: corpus, datasets, splits, cached model training.
+
+All benchmarks operate on the same corpus (synthetic families + programs
+imported from the assigned architectures) with the paper's two split
+methods. Trained cost models are cached under experiments/bench_cache keyed
+by a config hash so re-runs (and the §Perf loop) are incremental.
+
+Scale knobs: BENCH_SCALE env (default 1.0; quick CI = 0.3) scales program
+counts and training steps.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import sys
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.analytical import AnalyticalModel, fit_type_coefficients
+from repro.core.features import FeatureNormalizer, fit_normalizer
+from repro.core.hlo_import import import_arch_program
+from repro.core.model import CostModelConfig
+from repro.core.simulator import TPUSimulator
+from repro.data.corpus import filter_by_programs, split_programs
+from repro.data.fusion_dataset import FusionDataset, build_fusion_dataset
+from repro.data.sampler import BalancedSampler, TileBatchSampler
+from repro.data.synthetic import generate_corpus
+from repro.data.tile_dataset import TileDataset, build_tile_dataset
+from repro.training.checkpoint import latest_step, restore_checkpoint, \
+    save_checkpoint
+from repro.training.optim import AdamWConfig
+from repro.training.trainer import CostModelTrainer, TrainerConfig
+
+SCALE = float(os.environ.get("BENCH_SCALE", "1.0"))
+MAX_NODES = 48
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                         "bench_cache")
+
+IMPORT_ARCHS = ["yi-9b", "mamba2-2.7b", "granite-moe-3b-a800m",
+                "recurrentgemma-9b", "musicgen-large"]
+
+
+def steps(n: int) -> int:
+    return max(int(n * SCALE), 50)
+
+
+@dataclass
+class World:
+    sim: TPUSimulator
+    programs: list
+    tile: TileDataset
+    fusion: FusionDataset
+    splits: dict                     # method -> {train/val/test: [names]}
+    normalizers: dict                # method -> FeatureNormalizer (train-fit)
+
+    def tile_records(self, method: str, part: str):
+        return filter_by_programs(self.tile.records,
+                                  self.splits[method][part])
+
+    def fusion_records(self, method: str, part: str):
+        return filter_by_programs(self.fusion.records,
+                                  self.splits[method][part])
+
+    def tile_subset(self, method: str, part: str) -> TileDataset:
+        return TileDataset(self.tile_records(method, part))
+
+    def fusion_subset(self, method: str, part: str) -> FusionDataset:
+        return FusionDataset(self.fusion_records(method, part))
+
+
+_WORLD = None
+
+
+def build_world(num_programs: int | None = None, seed: int = 0) -> World:
+    global _WORLD
+    if _WORLD is not None:
+        return _WORLD
+    n = num_programs or max(int(48 * SCALE), 16)
+    sim = TPUSimulator()
+    programs = generate_corpus(n, seed=seed)
+    for arch in IMPORT_ARCHS:
+        try:
+            programs.append(import_arch_program(arch))
+        except Exception as e:                        # noqa: BLE001
+            print(f"[warn] arch import {arch} failed: {e}", file=sys.stderr)
+    tds = build_tile_dataset(programs, sim, max_configs_per_kernel=24)
+    fds = build_fusion_dataset(
+        programs, sim, configs_per_program=max(int(12 * SCALE), 6))
+    names = sorted({p.program for p in programs})
+    splits = {m: split_programs(names, method=m, seed=seed)
+              for m in ("random", "manual")}
+    # normalizers are fit on the TRAIN split only (paper footnote 1)
+    normalizers = {}
+    for m in ("random", "manual"):
+        from repro.data.tile_dataset import fit_tile_normalizer
+        normalizers[m] = fit_tile_normalizer(
+            filter_by_programs(tds.records, splits[m]["train"]))
+    _WORLD = World(sim, programs, tds, fds, splits, normalizers)
+    return _WORLD
+
+
+# ----------------------------------------------------------------------------
+# Cached training
+# ----------------------------------------------------------------------------
+def _cfg_hash(model_cfg: CostModelConfig, task: str, method: str,
+              n_steps: int, extra: str = "") -> str:
+    blob = json.dumps([model_cfg.to_dict(), task, method, n_steps, extra,
+                       SCALE], sort_keys=True)
+    return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+
+def train_cost_model(world: World, model_cfg: CostModelConfig, *,
+                     task: str, method: str = "random",
+                     n_steps: int = 1000, lr: float = 2e-3,
+                     rank_phi: str = "hinge", tag: str = "") -> dict:
+    """Train (or load cached) params for a task/split. Returns params."""
+    from repro.core.model import cost_model_init
+    import jax
+
+    h = _cfg_hash(model_cfg, task + rank_phi, method, n_steps, tag)
+    ckpt_dir = os.path.join(CACHE_DIR, h)
+    template = {"params": cost_model_init(jax.random.key(0), model_cfg)}
+    if latest_step(ckpt_dir) is not None:
+        state, _, _ = restore_checkpoint(ckpt_dir, template)
+        return state["params"]
+
+    norm = world.normalizers[method]
+    if task.startswith("tile"):
+        sampler = TileBatchSampler(
+            world.tile_records(method, "train"), norm,
+            kernels_per_batch=3, configs_per_kernel=8, max_nodes=MAX_NODES)
+    else:
+        sampler = BalancedSampler(
+            world.fusion_records(method, "train"), norm,
+            batch_size=24, max_nodes=MAX_NODES)
+    tc = TrainerConfig(task=task, rank_phi=rank_phi, steps=n_steps,
+                       ckpt_every=0, log_every=200,
+                       optim=AdamWConfig(lr=lr, schedule="exponential",
+                                         lr_decay=0.9,
+                                         decay_every=max(n_steps // 4, 1)))
+    tr = CostModelTrainer(model_cfg, tc, sampler)
+    t0 = time.time()
+    tr.run(n_steps, resume=False)
+    print(f"    trained {task}/{method} {n_steps} steps in "
+          f"{time.time()-t0:.0f}s", file=sys.stderr)
+    save_checkpoint(ckpt_dir, n_steps, {"params": tr.params})
+    return tr.params
+
+
+def analytical_fusion_predictor(world: World, method: str):
+    """Analytical model with per-type coefficients fit like §5.2 (on the
+    test programs' default-fusion kernels)."""
+    am = AnalyticalModel()
+    recs = world.fusion_records(method, "test")
+    coeffs = fit_type_coefficients(am, [r.kernel for r in recs],
+                                   [r.runtime for r in recs])
+    from repro.core.evaluate import analytical_runtime_predictor
+    return analytical_runtime_predictor(am, coeffs)
+
+
+def paper_tile_model(hidden=64) -> CostModelConfig:
+    """The paper's chosen tile model: GraphSAGE + LSTM reduction."""
+    return CostModelConfig(gnn="graphsage", reduction="lstm",
+                           hidden_dim=hidden, opcode_embed_dim=16,
+                           max_nodes=MAX_NODES, dropout=0.1)
+
+
+def paper_fusion_model(hidden=64) -> CostModelConfig:
+    """The paper's chosen fusion model: GraphSAGE + Transformer, static
+    perf features as node features."""
+    return CostModelConfig(gnn="graphsage", reduction="transformer",
+                           hidden_dim=hidden, opcode_embed_dim=16,
+                           max_nodes=MAX_NODES, dropout=0.1)
+
+
+def csv_row(name: str, **kv) -> str:
+    parts = [name] + [f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                      for k, v in kv.items()]
+    return ",".join(parts)

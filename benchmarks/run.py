@@ -1,0 +1,69 @@
+"""Benchmark harness — one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run table2 fig4
+  BENCH_SCALE=0.3 python -m benchmarks.run           # quick pass
+
+Prints `name,key=value,...` CSV rows; each row maps to one cell of the
+corresponding paper artifact. Trained models are cached under
+experiments/bench_cache (delete to retrain).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _benches():
+    from benchmarks import (
+        bench_fig4,
+        bench_fig5,
+        bench_roofline,
+        bench_table2,
+        bench_table3,
+        bench_table4,
+        bench_table8,
+    )
+    return {
+        "table2": bench_table2.run,
+        "table3": bench_table3.run,
+        "table4": bench_table4.run,
+        "table8": bench_table8.run,
+        "fig4": bench_fig4.run,
+        "fig5": bench_fig5.run,
+        "roofline": bench_roofline.run,
+    }
+
+
+def main() -> None:
+    benches = _benches()
+    want = [a for a in sys.argv[1:] if not a.startswith("-")] or \
+        list(benches)
+    failures = 0
+    for name in want:
+        if name not in benches:
+            print(f"{name},ERROR=unknown benchmark")
+            failures += 1
+            continue
+        t0 = time.time()
+        try:
+            rows = benches[name]()
+            for r in rows:
+                print(r)
+            print(f"{name}.WALL,seconds={time.time()-t0:.1f}")
+        except Exception as e:                        # noqa: BLE001
+            failures += 1
+            print(f"{name},ERROR={type(e).__name__}:{str(e)[:200]}")
+            traceback.print_exc(file=sys.stderr)
+        sys.stdout.flush()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

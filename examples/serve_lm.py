@@ -1,0 +1,60 @@
+"""Serve a small model with batched requests: prefill + iterative decode
+through the production serving steps (same code paths the decode_32k /
+long_500k dry-run cells lower at full scale).
+
+  PYTHONPATH=src python examples/serve_lm.py --arch h2o-danube-3-4b
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm, registry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-3-4b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--decode-steps", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = registry.get_smoke_config(args.arch)
+    capacity = args.prompt_len + args.decode_steps
+    params = lm.init_params(jax.random.key(0), cfg)
+    prefill = jax.jit(lm.prefill_step_fn(cfg, capacity=capacity))
+    decode = jax.jit(lm.decode_step_fn(cfg))
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)
+
+    t0 = time.time()
+    logits, cache = prefill(params, {"tokens": prompts})
+    print(f"{cfg.name}: prefill {args.batch}x{args.prompt_len} in "
+          f"{time.time()-t0:.2f}s (incl. compile)")
+
+    t0 = time.time()
+    generated = []
+    for t in range(args.prompt_len, capacity):
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        generated.append(np.asarray(nxt)[:, 0])
+        logits, cache = decode(params, cache, nxt, jnp.asarray(t, jnp.int32))
+    dt = time.time() - t0
+    n = args.decode_steps * args.batch
+    print(f"decoded {n} tokens in {dt:.2f}s -> {n/dt:.1f} tok/s (CPU, "
+          f"interpret-free jnp path)")
+    print("first request's continuation:",
+          np.stack(generated, 1)[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Autotuners driven by the learned performance model (paper §7).
+
+* Tile-size autotuner: rank all valid tiles with a model, evaluate the top-k
+  on hardware (§7.2); k=1 is direct compiler integration (§7.1).
+* Fusion autotuner: simulated annealing over fusion configurations with a
+  hardware-minutes budget; the learned model pre-screens candidates on CPU
+  so scarce accelerator time is spent only on the most promising configs
+  (§7.3).
+"""
+from repro.autotuner.tile_autotuner import (
+    TileTuneResult,
+    autotune_program_tiles,
+    tune_kernel_tiles,
+)
+from repro.autotuner.fusion_autotuner import (
+    FusionSearchResult,
+    simulated_annealing_fusion,
+)
+
+__all__ = [
+    "TileTuneResult", "autotune_program_tiles", "tune_kernel_tiles",
+    "FusionSearchResult", "simulated_annealing_fusion",
+]

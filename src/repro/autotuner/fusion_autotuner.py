@@ -1,0 +1,146 @@
+"""Fusion autotuner: simulated annealing with a hardware-minutes budget
+(paper §7.3).
+
+Two operating modes, mirroring Fig. 5:
+  * 'HW m'            — anneal directly against hardware measurements for an
+    m-minute hardware budget.
+  * 'Cost model + HW' — anneal against the learned model (cheap, CPU), then
+    re-rank the most promising configs on hardware within a (much smaller)
+    hardware budget.
+
+Hardware time is *simulated* wall-clock: each hardware evaluation of a
+config charges its compile+run cost to the budget (`eval_seconds`), so the
+budget comparison is apples-to-apples without real TPUs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.graph import KernelGraph
+from repro.core.simulator import TPUSimulator
+from repro.data.fusion import (
+    FusionDecision,
+    apply_fusion,
+    default_fusion,
+    fusable_edges,
+    random_fusion,
+)
+
+CostFn = Callable[[Sequence[KernelGraph]], float]
+
+
+@dataclass
+class FusionSearchResult:
+    best_decision: FusionDecision
+    best_runtime: float             # measured on hardware
+    default_runtime: float
+    hardware_evals: int
+    model_evals: int
+    hardware_seconds_used: float
+    trace: list[float] = field(default_factory=list)
+
+    @property
+    def speedup(self) -> float:
+        return self.default_runtime / max(self.best_runtime, 1e-30)
+
+
+def _anneal(program: KernelGraph, start: FusionDecision, cost: CostFn,
+            *, steps: int, rng: np.random.Generator,
+            t0: float = 0.1, t1: float = 1e-3,
+            max_group: int = 48) -> tuple[list[tuple[float, FusionDecision]],
+                                          int]:
+    """Simulated annealing over edge decisions; returns visited
+    (cost, decision) pairs sorted best-first, and #cost evals."""
+    n_edges = len(fusable_edges(program))
+    cur = start
+    cur_cost = cost(apply_fusion(program, cur, max_group))
+    visited: dict[tuple, float] = {cur.fuse: cur_cost}
+    evals = 1
+    best = [(cur_cost, cur)]
+    for i in range(steps):
+        if n_edges == 0:
+            break
+        temp = t0 * (t1 / t0) ** (i / max(steps - 1, 1))
+        flips = 1 + int(rng.random() < 0.3)
+        cand = cur
+        for _ in range(flips):
+            cand = cand.flip(int(rng.integers(n_edges)))
+        if cand.fuse in visited:
+            cand_cost = visited[cand.fuse]
+        else:
+            cand_cost = cost(apply_fusion(program, cand, max_group))
+            visited[cand.fuse] = cand_cost
+            evals += 1
+            best.append((cand_cost, cand))
+        accept = cand_cost < cur_cost or \
+            rng.random() < np.exp(-(cand_cost - cur_cost) /
+                                  max(temp * cur_cost, 1e-30))
+        if accept:
+            cur, cur_cost = cand, cand_cost
+    best.sort(key=lambda x: x[0])
+    return best, evals
+
+
+def simulated_annealing_fusion(
+        program: KernelGraph, sim: TPUSimulator, *,
+        model_cost: CostFn | None = None,
+        hardware_budget_s: float = 60.0,
+        model_steps: int = 300,
+        eval_seconds: float = 2.0,
+        seed: int = 0,
+        start: str = "default",
+        max_group: int = 48) -> FusionSearchResult:
+    """Search fusion configs for one program.
+
+    model_cost=None  => 'HW m' mode (anneal on hardware directly).
+    model_cost given => 'Cost model + HW': anneal on the model, then spend
+    the hardware budget re-ranking the model's best configs.
+    """
+    rng = np.random.default_rng(seed)
+    start_dec = default_fusion(program) if start == "default" \
+        else random_fusion(program, rng)
+    hw_cost: CostFn = lambda kernels: sim.measure_program(kernels)
+
+    default_runtime = hw_cost(apply_fusion(program, default_fusion(program),
+                                           max_group))
+    hw_evals = 0
+    hw_seconds = 0.0
+    model_evals = 0
+    trace: list[float] = []
+
+    if model_cost is None:
+        # anneal directly on hardware until the budget runs out
+        budget_steps = max(int(hardware_budget_s / eval_seconds), 1)
+        visited, evals = _anneal(program, start_dec, hw_cost,
+                                 steps=budget_steps, rng=rng,
+                                 max_group=max_group)
+        hw_evals = evals
+        hw_seconds = evals * eval_seconds
+        best_cost, best_dec = visited[0]
+        trace = [c for c, _ in visited[:20]]
+    else:
+        # anneal on the model (free), validate top configs on hardware
+        visited, model_evals = _anneal(program, start_dec, model_cost,
+                                       steps=model_steps, rng=rng,
+                                       max_group=max_group)
+        top = visited[:max(int(hardware_budget_s / eval_seconds), 1)]
+        best_cost, best_dec = float("inf"), start_dec
+        for _, dec in top:
+            rt = hw_cost(apply_fusion(program, dec, max_group))
+            hw_evals += 1
+            hw_seconds += eval_seconds
+            trace.append(rt)
+            if rt < best_cost:
+                best_cost, best_dec = rt, dec
+            if hw_seconds >= hardware_budget_s:
+                break
+
+    # the compiler default is always available as a fallback
+    if default_runtime < best_cost:
+        best_cost = default_runtime
+        best_dec = default_fusion(program)
+    return FusionSearchResult(best_dec, best_cost, default_runtime,
+                              hw_evals, model_evals, hw_seconds, trace)

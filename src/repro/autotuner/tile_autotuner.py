@@ -1,0 +1,109 @@
+"""Tile-size autotuner (paper §7.1/§7.2).
+
+Modes:
+  * 'exhaustive' — measure every valid tile on hardware (the baseline
+    autotuner; expensive).
+  * model top-k  — rank candidates with a cost model (learned or
+    analytical), measure only the top-k on hardware, keep the best.
+    k=1 == direct compiler integration (no hardware in the loop).
+
+The same interface tunes this framework's own Pallas kernels: block-shape
+candidates from `repro.kernels.*.ops.block_candidates()` are scored the
+same way (see examples/autotune_tilesize.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.graph import KernelGraph
+from repro.core.simulator import TPUSimulator
+from repro.data.tile_dataset import enumerate_tiles
+
+Scorer = Callable[[KernelGraph, Sequence[tuple[int, ...]]], np.ndarray]
+
+
+@dataclass
+class TileTuneResult:
+    kernel_name: str
+    chosen_tile: tuple[int, ...]
+    chosen_runtime: float            # measured on hardware
+    best_runtime: float              # exhaustive-best (if known)
+    hardware_evals: int
+    candidates: int
+
+    @property
+    def regret(self) -> float:
+        if self.best_runtime <= 0:
+            return 0.0
+        return self.chosen_runtime / self.best_runtime - 1.0
+
+
+def tune_kernel_tiles(kernel: KernelGraph, sim: TPUSimulator, *,
+                      scorer: Scorer | None = None, top_k: int = 10,
+                      max_configs: int = 128,
+                      tiles: Sequence[tuple[int, ...]] | None = None,
+                      exhaustive_truth: bool = True) -> TileTuneResult:
+    """Tune one kernel. scorer=None => exhaustive hardware search."""
+    if tiles is None:
+        tiles = enumerate_tiles(kernel, max_configs, sim.hw)
+    tiles = list(tiles)
+    if not tiles:
+        raise ValueError(f"no valid tiles for kernel {kernel.name}")
+
+    true_best = float("inf")
+    if exhaustive_truth:
+        true_best = min(sim.measure(kernel.with_tile(t)) for t in tiles)
+
+    if scorer is None:                       # exhaustive autotuner
+        runtimes = [sim.measure(kernel.with_tile(t)) for t in tiles]
+        i = int(np.argmin(runtimes))
+        return TileTuneResult(kernel.name, tiles[i], float(runtimes[i]),
+                              true_best if exhaustive_truth
+                              else float(runtimes[i]),
+                              hardware_evals=len(tiles),
+                              candidates=len(tiles))
+
+    scores = np.asarray(scorer(kernel, tiles))
+    order = np.argsort(scores)[:max(top_k, 1)]
+    measured = [(int(i), sim.measure(kernel.with_tile(tiles[int(i)])))
+                for i in order]
+    bi, bt = min(measured, key=lambda x: x[1])
+    return TileTuneResult(kernel.name, tiles[bi], float(bt),
+                          true_best if exhaustive_truth else float(bt),
+                          hardware_evals=len(measured),
+                          candidates=len(tiles))
+
+
+@dataclass
+class ProgramTuneResult:
+    results: list[TileTuneResult] = field(default_factory=list)
+
+    @property
+    def total_runtime(self) -> float:
+        return sum(r.chosen_runtime for r in self.results)
+
+    @property
+    def best_runtime(self) -> float:
+        return sum(r.best_runtime for r in self.results)
+
+    @property
+    def hardware_evals(self) -> int:
+        return sum(r.hardware_evals for r in self.results)
+
+    def speedup_over(self, other_total: float) -> float:
+        return other_total / max(self.total_runtime, 1e-30)
+
+
+def autotune_program_tiles(kernels: Sequence[KernelGraph],
+                           sim: TPUSimulator, *, scorer: Scorer | None,
+                           top_k: int = 10, max_configs: int = 128
+                           ) -> ProgramTuneResult:
+    out = ProgramTuneResult()
+    for k in kernels:
+        out.results.append(
+            tune_kernel_tiles(k, sim, scorer=scorer, top_k=top_k,
+                              max_configs=max_configs))
+    return out

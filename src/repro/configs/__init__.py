@@ -1,0 +1,2 @@
+"""Architecture configs — one module per assigned architecture plus the
+paper's own cost-model config. Access via repro.models.registry."""

@@ -1,0 +1,14 @@
+# The paper's primary contribution: a learned performance model for tensor
+# programs (kernel graphs), plus the analytical baseline and the measurement
+# oracle (TPU timing simulator). See DESIGN.md for the layer map.
+from repro.core.graph import KernelGraph, Node, Program
+from repro.core.model import CostModelConfig, cost_model_apply, cost_model_init
+from repro.core.simulator import TPUSimulator, V5E, HardwareSpec
+from repro.core.analytical import AnalyticalModel
+
+__all__ = [
+    "KernelGraph", "Node", "Program",
+    "CostModelConfig", "cost_model_apply", "cost_model_init",
+    "TPUSimulator", "V5E", "HardwareSpec",
+    "AnalyticalModel",
+]

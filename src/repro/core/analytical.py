@@ -1,0 +1,112 @@
+"""The analytical baseline — the paper's Appendix-A model, reimplemented.
+
+XLA's hand-tuned model estimates a kernel's data-transfer time and compute
+time per tile iteration and takes the **maximum** of the two. It is heavily
+tuned: it models tile-dependent operand re-reads, achieved bandwidth as a
+function of transfer size ("larger transfers are more efficient"), and
+lane-padded compute (tiles are rounded up to the 8×128 vector/MXU lanes).
+
+Its blind spots are exactly the ones Appendix A admits:
+  (i)   bi-directional transfer interactions (in/out folded together, no
+        pipeline fill/drain),
+  (ii)  instruction scheduling (no ILP/critical-path factor),
+  (iii) register usage effects (no fan-out pressure penalty),
+  (iv)  dynamic stalls & fixed overheads (no kernel launch cost, no per-tile
+        sequencing bubble, no separate transcendental unit, and its DMA
+        latency constant is hand-tuned slightly off the real machine).
+
+Those are what the ground-truth simulator adds — the learned model has real
+signal to pick up, mirroring the paper's result structure (analytical is
+good at within-kernel tile ranking, poor at absolute cross-kernel runtimes).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.graph import KernelGraph
+from repro.core.simulator import (
+    HardwareSpec,
+    TileStats,
+    V5E,
+    _round_up,
+    tile_stats,
+)
+
+
+@dataclass
+class AnalyticalModel:
+    """max(compute, transfer) per tile — hand-tuned constants."""
+    hw: HardwareSpec = V5E
+    mxu_utilization: float = 0.78        # single hand-tuned constant
+    vpu_utilization: float = 0.6
+    dma_latency: float = 0.8e-6          # hand-tuned; real machine is 1.2e-6
+    loop_cost: float = 2.0e-8            # per-iteration bookkeeping (tuned;
+    #                                      the machine's true bubble is ~8x)
+
+    def _dma_eff(self, nbytes: float) -> float:
+        if nbytes <= 0:
+            return 1.0
+        return max(nbytes / (nbytes + self.hw.hbm_bw * self.dma_latency),
+                   0.02)
+
+    def predict(self, g: KernelGraph, tile: tuple[int, ...] | None = None) -> float:
+        st: TileStats = tile_stats(g, tile, self.hw)
+        if st.vmem_per_tile > self.hw.vmem_bytes * self.hw.vmem_usable_frac:
+            # analytical model rejects invalid tiles with a large constant
+            return 1.0
+
+        # lane-padded compute: tiles round up to the 8x128 hardware lanes
+        t = st.tile
+        last = t[-1] if t else 1
+        second = t[-2] if len(t) >= 2 else 1
+        pad = (_round_up(last, 128) / max(last, 1)) * \
+              (_round_up(second, 8) / max(second, 1))
+        mxu_t = st.mxu_flops_per_tile * pad / (self.hw.peak_mxu_flops *
+                                               self.mxu_utilization)
+        # one vector rate for everything non-MXU (no transcendental unit)
+        vpu_t = (st.vpu_flops_per_tile /
+                 (self.hw.peak_vpu_flops * self.vpu_utilization))
+        compute_t = mxu_t + vpu_t
+
+        bytes_tile = st.bytes_in_per_tile + st.bytes_out_per_tile
+        mem_t = bytes_tile / (self.hw.hbm_bw * self._dma_eff(bytes_tile))
+
+        return st.num_tiles * (max(compute_t, mem_t) + self.loop_cost)
+
+    def best_tile(self, g: KernelGraph, tiles) -> tuple[int, ...]:
+        """Compiler default: pick argmin over enumerated tiles."""
+        best, best_t = None, float("inf")
+        for t in tiles:
+            p = self.predict(g, t)
+            if p < best_t:
+                best, best_t = t, p
+        return tuple(best) if best is not None else ()
+
+
+def fit_type_coefficients(model: AnalyticalModel, kernels, measured) -> dict:
+    """Paper §5.2: scale the analytical output per kernel *type* so it can be
+    compared on absolute runtimes (the model's scales differ across types).
+    Coefficient = Σ true / Σ predicted per type."""
+    sums: dict[str, list[float]] = {}
+    for g, y in zip(kernels, measured):
+        ty = kernel_type(g)
+        s = sums.setdefault(ty, [0.0, 0.0])
+        s[0] += y
+        s[1] += model.predict(g)
+    return {ty: (s[0] / s[1] if s[1] > 0 else 1.0) for ty, s in sums.items()}
+
+
+def kernel_type(g: KernelGraph) -> str:
+    has_conv = any(n.op.name == "convolution" for n in g.nodes)
+    has_dot = any(n.op.name == "dot" for n in g.nodes)
+    if has_conv:
+        return "conv"
+    if has_dot:
+        return "dot"
+    if any(n.op.name.startswith("reduce") for n in g.nodes):
+        return "reduce"
+    return "elementwise"
+
+
+def predict_scaled(model: AnalyticalModel, coeffs: dict, g: KernelGraph) -> float:
+    return model.predict(g) * coeffs.get(kernel_type(g), 1.0)

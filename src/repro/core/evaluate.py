@@ -1,0 +1,145 @@
+"""Batched evaluation of cost models against the measurement oracle —
+produces the paper's Table-2/8 style per-program metrics."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import features as F
+from repro.core.analytical import AnalyticalModel, fit_type_coefficients, \
+    predict_scaled
+from repro.core.metrics import (
+    geometric_mean,
+    kendall_tau,
+    mape,
+    program_kendall,
+    tile_size_ape,
+)
+from repro.core.model import CostModelConfig, cost_model_apply
+
+
+def make_predict_fn(model_cfg: CostModelConfig):
+    @jax.jit
+    def predict(params, batch):
+        return cost_model_apply(params, model_cfg, batch, deterministic=True)
+    return predict
+
+
+def predict_kernels(params, model_cfg: CostModelConfig, graphs, normalizer,
+                    *, max_nodes: int = 64, chunk: int = 128,
+                    predict_fn=None) -> np.ndarray:
+    """Predict scores for a list of KernelGraphs (padded batched inference).
+
+    Pads the last chunk to `chunk` so every call hits one compiled shape.
+    """
+    predict = predict_fn or make_predict_fn(model_cfg)
+    out = []
+    for i in range(0, len(graphs), chunk):
+        part = graphs[i:i + chunk]
+        pad = chunk - len(part)
+        enc = F.encode_batch(part + [part[-1]] * pad, max_nodes, normalizer)
+        preds = np.asarray(predict(params, enc))
+        out.append(preds[:len(part)])
+    return np.concatenate(out) if out else np.zeros((0,))
+
+
+# ----------------------------------------------------------------------------
+# Tile-size task (Table 2 left): Tile-Size APE + per-kernel Kendall τ
+# ----------------------------------------------------------------------------
+def eval_tile_program(records, scorer) -> dict:
+    """records: TileKernelRecords of ONE program.
+    scorer(kernel, tiles) -> predicted scores (lower = faster)."""
+    per_kernel = []
+    for r in records:
+        pred = scorer(r.kernel, r.tiles)
+        per_kernel.append({"true": r.runtimes, "pred": pred})
+    return {
+        "ape": tile_size_ape(per_kernel),
+        "kendall": program_kendall(per_kernel),
+    }
+
+
+def learned_tile_scorer(params, model_cfg, normalizer, *, max_nodes=64,
+                        chunk=128):
+    predict = make_predict_fn(model_cfg)
+
+    def scorer(kernel, tiles):
+        graphs = [kernel.with_tile(t) for t in tiles]
+        return predict_kernels(params, model_cfg, graphs, normalizer,
+                               max_nodes=max_nodes, chunk=chunk,
+                               predict_fn=predict)
+    return scorer
+
+
+def analytical_tile_scorer(model: AnalyticalModel):
+    def scorer(kernel, tiles):
+        return np.array([model.predict(kernel, t) for t in tiles])
+    return scorer
+
+
+def eval_tile_task(dataset, scorer) -> dict:
+    """Returns per-program metrics + median/mean summary (Table 2 style)."""
+    per_prog = {}
+    for prog, recs in dataset.by_program().items():
+        per_prog[prog] = eval_tile_program(recs, scorer)
+    apes = [m["ape"] for m in per_prog.values()]
+    taus = [m["kendall"] for m in per_prog.values()]
+    return {
+        "per_program": per_prog,
+        "median_ape": float(np.median(apes)) if apes else float("nan"),
+        "mean_ape": float(np.mean(apes)) if apes else float("nan"),
+        "median_kendall": float(np.median(taus)) if taus else float("nan"),
+        "mean_kendall": float(np.mean(taus)) if taus else float("nan"),
+    }
+
+
+# ----------------------------------------------------------------------------
+# Fusion task (Table 2 right): MAPE + Kendall τ on absolute runtimes
+# ----------------------------------------------------------------------------
+def eval_fusion_task(dataset, predict_runtimes, *,
+                     min_runtime: float = 0.0) -> dict:
+    """predict_runtimes(kernels) -> seconds. Kernels filtered to
+    runtime >= min_runtime (the paper reports ≥5µs separately)."""
+    per_prog = {}
+    for prog, recs in dataset.by_program().items():
+        recs = [r for r in recs if r.runtime >= min_runtime]
+        if not recs:
+            continue
+        true = np.array([r.runtime for r in recs])
+        pred = predict_runtimes([r.kernel for r in recs])
+        per_prog[prog] = {
+            "mape": mape(pred, true),
+            "kendall": kendall_tau(pred, true),
+            "n": len(recs),
+        }
+    mapes = [m["mape"] for m in per_prog.values()]
+    taus = [m["kendall"] for m in per_prog.values()]
+    return {
+        "per_program": per_prog,
+        "median_mape": float(np.median(mapes)) if mapes else float("nan"),
+        "mean_mape": float(np.mean(mapes)) if mapes else float("nan"),
+        "median_kendall": float(np.median(taus)) if taus else float("nan"),
+        "mean_kendall": float(np.mean(taus)) if taus else float("nan"),
+    }
+
+
+def learned_runtime_predictor(params, model_cfg, normalizer, *,
+                              max_nodes=64, chunk=128):
+    """Fusion-task model predicts log-runtime; exponentiate."""
+    predict = make_predict_fn(model_cfg)
+
+    def predict_runtimes(kernels):
+        scores = predict_kernels(params, model_cfg, kernels, normalizer,
+                                 max_nodes=max_nodes, chunk=chunk,
+                                 predict_fn=predict)
+        return np.exp(scores)
+    return predict_runtimes
+
+
+def analytical_runtime_predictor(model: AnalyticalModel, coeffs: dict):
+    def predict_runtimes(kernels):
+        return np.array([predict_scaled(model, coeffs, k) for k in kernels])
+    return predict_runtimes

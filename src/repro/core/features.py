@@ -1,0 +1,239 @@
+"""Feature extraction — paper §3.1.
+
+Node features: opcode (categorical, embedded by the model) + scalar features
+describing the node: output shape (variable-length → fixed sub-vector + sum +
+product, §3.1 "Variable-Sized Features"), rank, dtype size, layout flag,
+parameter/output flags, fan-in/fan-out, reduction dims, conv filter size.
+
+Kernel features: tile size (same variable-length encoding; zeros for the
+fusion task) + the four optional static performance features (FLOPs, bytes
+read, bytes written, transcendental-unit instruction count).
+
+All magnitude features go through log1p before [0,1] min-max scaling; the
+normalizer statistics are fit on the training set only (paper footnote 1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import opset
+from repro.core.graph import KernelGraph
+
+SHAPE_SUBVEC = 6          # fixed sub-vector length for per-dimension features
+TILE_SUBVEC = 6
+
+
+def _subvec(values: Sequence[int], k: int) -> np.ndarray:
+    """Encode a variable-length list: pad/truncate to k, append sum, product,
+    log1p(product). Product is 'critical' per the paper (tensor volume)."""
+    v = np.zeros((k + 3,), np.float64)
+    vals = [float(x) for x in values][:k]
+    v[:len(vals)] = vals
+    arr = np.asarray(list(values), np.float64)
+    total = float(arr.sum()) if arr.size else 0.0
+    prod = float(arr.prod()) if arr.size else 0.0    # f64: no int overflow
+    v[k] = total
+    v[k + 1] = prod
+    v[k + 2] = np.log1p(prod)
+    return v
+
+
+SHAPE_FEATS = SHAPE_SUBVEC + 3
+TILE_FEATS = TILE_SUBVEC + 3
+
+# node scalar features layout:
+#   [shape subvec+3 | rank | dtype_bytes | row_major flag | is_param |
+#    is_output | fan_in | fan_out | reduced subvec(2)+3 | filter(2)+3 |
+#    contract_dim | log1p(flops) | log1p(bytes_out) | elementwise flag |
+#    transcendental flag ]
+NODE_FEATURE_DIM = SHAPE_FEATS + 7 + (2 + 3) + (2 + 3) + 1 + 2 + 2
+
+# kernel scalar features layout:
+#   [tile subvec+3 | 4 static perf features (log1p) | num_nodes | depth]
+KERNEL_FEATURE_DIM = TILE_FEATS + 4 + 2
+STATIC_PERF_SLICE = slice(TILE_FEATS, TILE_FEATS + 4)
+TILE_SLICE = slice(0, TILE_FEATS)
+
+
+def node_features(g: KernelGraph) -> np.ndarray:
+    n_nodes = g.num_nodes
+    fan_out = g.fan_out()
+    feats = np.zeros((n_nodes, NODE_FEATURE_DIM), np.float64)
+    for i, n in enumerate(g.nodes):
+        parts = [
+            _subvec(n.shape, SHAPE_SUBVEC),
+            np.array([
+                len(n.shape),
+                n.dtype_bytes,
+                1.0,                                   # default row-major layout
+                1.0 if n.op is opset.PARAMETER else 0.0,
+                1.0 if n.is_output else 0.0,
+                float(len(n.inputs)),
+                float(fan_out[i]),
+            ]),
+            _subvec(n.reduced_dims, 2),
+            _subvec(n.filter_size if n.op is opset.CONV else (), 2),
+            np.array([float(n.contract_dim)]),
+            np.array([np.log1p(n.flops()), np.log1p(n.bytes_out)]),
+            np.array([1.0 if n.op.elementwise else 0.0,
+                      1.0 if n.op.transcendental else 0.0]),
+        ]
+        feats[i] = np.concatenate(parts)
+    return feats
+
+
+def kernel_features(g: KernelGraph, *, include_static_perf: bool = True,
+                    include_tile: bool = True) -> np.ndarray:
+    tile = g.tile_size if include_tile else ()
+    static = np.zeros((4,), np.float64)
+    if include_static_perf:
+        static = np.array([
+            np.log1p(g.total_flops()),
+            np.log1p(g.bytes_read()),
+            np.log1p(g.bytes_written()),
+            np.log1p(g.transcendental_total()),
+        ])
+    return np.concatenate([
+        _subvec(tile, TILE_SUBVEC),
+        static,
+        np.array([float(g.num_nodes), float(g.depth())]),
+    ])
+
+
+def opcode_ids(g: KernelGraph) -> np.ndarray:
+    return np.array([n.op.index for n in g.nodes], np.int32)
+
+
+def adjacency(g: KernelGraph, n_max: int) -> np.ndarray:
+    """Dense directed adjacency: adj[d, s] = 1 iff edge s -> d."""
+    a = np.zeros((n_max, n_max), np.float32)
+    for s, d in g.edges():
+        if s < n_max and d < n_max:
+            a[d, s] = 1.0
+    return a
+
+
+# ----------------------------------------------------------------------------
+# Normalization (fit on train set only)
+# ----------------------------------------------------------------------------
+@dataclass
+class FeatureNormalizer:
+    node_min: np.ndarray
+    node_max: np.ndarray
+    kernel_min: np.ndarray
+    kernel_max: np.ndarray
+
+    @staticmethod
+    def fit(node_feats: Sequence[np.ndarray],
+            kernel_feats: Sequence[np.ndarray]) -> "FeatureNormalizer":
+        nf = np.concatenate([f for f in node_feats], axis=0)
+        kf = np.stack(list(kernel_feats), axis=0)
+        return FeatureNormalizer(
+            node_min=nf.min(axis=0), node_max=nf.max(axis=0),
+            kernel_min=kf.min(axis=0), kernel_max=kf.max(axis=0))
+
+    def transform_node(self, f: np.ndarray) -> np.ndarray:
+        rng = np.maximum(self.node_max - self.node_min, 1e-9)
+        return np.clip((f - self.node_min) / rng, 0.0, 1.0)
+
+    def transform_kernel(self, f: np.ndarray) -> np.ndarray:
+        rng = np.maximum(self.kernel_max - self.kernel_min, 1e-9)
+        return np.clip((f - self.kernel_min) / rng, 0.0, 1.0)
+
+    def to_dict(self) -> dict:
+        return {"node_min": self.node_min.tolist(),
+                "node_max": self.node_max.tolist(),
+                "kernel_min": self.kernel_min.tolist(),
+                "kernel_max": self.kernel_max.tolist()}
+
+    @staticmethod
+    def from_dict(d: dict) -> "FeatureNormalizer":
+        return FeatureNormalizer(
+            np.asarray(d["node_min"]), np.asarray(d["node_max"]),
+            np.asarray(d["kernel_min"]), np.asarray(d["kernel_max"]))
+
+
+# ----------------------------------------------------------------------------
+# Batched device encoding
+# ----------------------------------------------------------------------------
+@dataclass
+class GraphBatch:
+    """Padded batch pytree. All arrays are numpy here; the trainer moves them
+    to device. Registered as a pytree below so it can cross jit boundaries."""
+    opcodes: np.ndarray        # [B, N] int32
+    node_feats: np.ndarray     # [B, N, F_node] float32
+    adj: np.ndarray            # [B, N, N] float32  (adj[b, d, s])
+    node_mask: np.ndarray      # [B, N] float32
+    kernel_feats: np.ndarray   # [B, F_kernel] float32
+
+    @property
+    def batch_size(self) -> int:
+        return self.opcodes.shape[0]
+
+    @property
+    def max_nodes(self) -> int:
+        return self.opcodes.shape[1]
+
+
+def _graphbatch_flatten(b: GraphBatch):
+    return ((b.opcodes, b.node_feats, b.adj, b.node_mask, b.kernel_feats), None)
+
+
+def _graphbatch_unflatten(_, children):
+    return GraphBatch(*children)
+
+
+import jax.tree_util as _jtu  # noqa: E402
+
+_jtu.register_pytree_node(GraphBatch, _graphbatch_flatten, _graphbatch_unflatten)
+
+
+def encode_graph(g: KernelGraph, n_max: int,
+                 normalizer: FeatureNormalizer | None = None,
+                 *, include_static_perf: bool = True) -> dict:
+    """Encode one kernel to padded arrays (raw, unnormalized by default)."""
+    n = min(g.num_nodes, n_max)
+    ops = np.zeros((n_max,), np.int32)
+    ops[:n] = opcode_ids(g)[:n]
+    nf_raw = node_features(g)[:n]
+    kf_raw = kernel_features(g, include_static_perf=include_static_perf)
+    if normalizer is not None:
+        nf_raw = normalizer.transform_node(nf_raw)
+        kf_raw = normalizer.transform_kernel(kf_raw)
+    nf = np.zeros((n_max, NODE_FEATURE_DIM), np.float32)
+    nf[:n] = nf_raw
+    mask = np.zeros((n_max,), np.float32)
+    mask[:n] = 1.0
+    return {
+        "opcodes": ops,
+        "node_feats": nf,
+        "adj": adjacency(g, n_max),
+        "node_mask": mask,
+        "kernel_feats": kf_raw.astype(np.float32),
+    }
+
+
+def encode_batch(graphs: Sequence[KernelGraph], n_max: int,
+                 normalizer: FeatureNormalizer | None = None,
+                 *, include_static_perf: bool = True) -> GraphBatch:
+    enc = [encode_graph(g, n_max, normalizer,
+                        include_static_perf=include_static_perf)
+           for g in graphs]
+    return GraphBatch(
+        opcodes=np.stack([e["opcodes"] for e in enc]),
+        node_feats=np.stack([e["node_feats"] for e in enc]),
+        adj=np.stack([e["adj"] for e in enc]),
+        node_mask=np.stack([e["node_mask"] for e in enc]),
+        kernel_feats=np.stack([e["kernel_feats"] for e in enc]),
+    )
+
+
+def fit_normalizer(graphs: Sequence[KernelGraph],
+                   *, include_static_perf: bool = True) -> FeatureNormalizer:
+    nfs = [node_features(g) for g in graphs]
+    kfs = [kernel_features(g, include_static_perf=include_static_perf)
+           for g in graphs]
+    return FeatureNormalizer.fit(nfs, kfs)

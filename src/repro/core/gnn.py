@@ -1,0 +1,204 @@
+"""Graph neural networks over batched kernel graphs (paper §3.2).
+
+GraphSAGE (the paper's choice) and GAT (the ablation alternative), both
+direction-aware: incoming and outgoing edges aggregate through separate
+feedforward modules ('Undirected' ablation shares them).
+
+Aggregation is a dense masked-adjacency matmul — `adj[b, d, s] @ h[b, s, :]`
+— which is the TPU-native formulation (MXU-friendly; see DESIGN.md §3).
+`repro.kernels.graph_aggregate` provides the fused Pallas version; this file
+is the jnp reference path used for training on CPU and as the kernel oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.core import (
+    dense_apply,
+    dense_init,
+    l2_normalize,
+)
+
+
+# ----------------------------------------------------------------------------
+# GraphSAGE
+# ----------------------------------------------------------------------------
+def sage_layer_init(rng, dim: int, *, directed: bool, dtype=jnp.float32) -> dict:
+    k_in, k_out, k3 = jax.random.split(rng, 3)
+    params = {
+        "f2_in": dense_init(k_in, dim, dim, bias=False, dtype=dtype),
+        # concat(self, agg_in[, agg_out]) -> dim
+        "f3": dense_init(k3, dim * (3 if directed else 2), dim, bias=False,
+                         dtype=dtype),
+    }
+    if directed:
+        params["f2_out"] = dense_init(k_out, dim, dim, bias=False, dtype=dtype)
+    return params
+
+
+def _aggregate(adj: jnp.ndarray, h: jnp.ndarray, node_mask: jnp.ndarray,
+               aggregator: str) -> jnp.ndarray:
+    """adj: [B,N,N] (adj[b,d,s]); h: [B,N,D]; returns [B,N,D] per-dst agg."""
+    h = h * node_mask[..., None]
+    agg = jnp.einsum("bds,bsh->bdh", adj, h)
+    if aggregator == "mean":
+        deg = jnp.sum(adj, axis=-1, keepdims=True)
+        agg = agg / jnp.maximum(deg, 1.0)
+    return agg
+
+
+def sage_layer_apply(params: dict, eps: jnp.ndarray, adj: jnp.ndarray,
+                     node_mask: jnp.ndarray, *, aggregator: str = "mean",
+                     directed: bool = True,
+                     use_pallas: bool = False) -> jnp.ndarray:
+    """One GraphSAGE hop:
+    eps_i^k = l2( f3( concat(eps_i, Σ_{j∈in(i)} f2_in(eps_j)
+                              [, Σ_{j∈out(i)} f2_out(eps_j)]) ) )
+
+    use_pallas=True routes the transform+aggregate through the fused
+    repro.kernels.graph_aggregate kernel (beyond-paper optimization —
+    interpret-mode on CPU, real VMEM fusion on TPU).
+    """
+    if use_pallas:
+        from repro.kernels.graph_aggregate.ops import graph_aggregate
+        import jax as _jax
+        interp = _jax.default_backend() == "cpu"
+        mean = aggregator == "mean"
+        agg_in = graph_aggregate(adj, eps, params["f2_in"]["w"],
+                                 act="relu", mean=mean, interpret=interp)
+        parts = [eps, agg_in]
+        if directed:
+            adj_t = jnp.swapaxes(adj, -1, -2)
+            parts.append(graph_aggregate(adj_t, eps, params["f2_out"]["w"],
+                                         act="relu", mean=mean,
+                                         interpret=interp))
+        else:
+            adj_t = jnp.swapaxes(adj, -1, -2)
+            agg_out = graph_aggregate(adj_t, eps, params["f2_in"]["w"],
+                                      act="relu", mean=mean,
+                                      interpret=interp)
+            parts[1] = 0.5 * (agg_in + agg_out)
+        h = dense_apply(params["f3"], jnp.concatenate(parts, axis=-1))
+        h = jax.nn.relu(h)
+        return l2_normalize(h, axis=-1) * node_mask[..., None]
+
+    msg_in = jax.nn.relu(dense_apply(params["f2_in"], eps))
+    agg_in = _aggregate(adj, msg_in, node_mask, aggregator)
+    parts = [eps, agg_in]
+    if directed:
+        msg_out = jax.nn.relu(dense_apply(params["f2_out"], eps))
+        # outgoing edges: transpose the adjacency
+        agg_out = _aggregate(jnp.swapaxes(adj, -1, -2), msg_out, node_mask,
+                             aggregator)
+        parts.append(agg_out)
+    else:
+        # undirected ablation: same module, symmetrized adjacency
+        agg_out = _aggregate(jnp.swapaxes(adj, -1, -2), msg_in, node_mask,
+                             aggregator)
+        parts[1] = 0.5 * (agg_in + agg_out)
+    h = dense_apply(params["f3"], jnp.concatenate(parts, axis=-1))
+    h = jax.nn.relu(h)
+    return l2_normalize(h, axis=-1) * node_mask[..., None]
+
+
+def sage_init(rng, dim: int, num_layers: int, *, directed: bool = True,
+              dtype=jnp.float32) -> dict:
+    keys = jax.random.split(rng, max(num_layers, 1))
+    return {"layers": [sage_layer_init(keys[i], dim, directed=directed,
+                                       dtype=dtype)
+                       for i in range(num_layers)]}
+
+
+def sage_apply(params: dict, eps: jnp.ndarray, adj: jnp.ndarray,
+               node_mask: jnp.ndarray, *, aggregator: str = "mean",
+               directed: bool = True, use_pallas: bool = False) -> jnp.ndarray:
+    for layer in params["layers"]:
+        eps = sage_layer_apply(layer, eps, adj, node_mask,
+                               aggregator=aggregator, directed=directed,
+                               use_pallas=use_pallas)
+    return eps
+
+
+# ----------------------------------------------------------------------------
+# GAT
+# ----------------------------------------------------------------------------
+def gat_layer_init(rng, dim: int, num_heads: int, *, directed: bool,
+                   dtype=jnp.float32) -> dict:
+    assert dim % num_heads == 0
+    hd = dim // num_heads
+    ks = jax.random.split(rng, 6)
+    params = {
+        "w_in": dense_init(ks[0], dim, dim, bias=False, dtype=dtype),
+        "a_src_in": jax.random.normal(ks[1], (num_heads, hd), dtype) * 0.1,
+        "a_dst_in": jax.random.normal(ks[2], (num_heads, hd), dtype) * 0.1,
+        "proj": dense_init(ks[3], dim * (2 if directed else 1), dim,
+                           bias=False, dtype=dtype),
+    }
+    if directed:
+        params["w_out"] = dense_init(ks[4], dim, dim, bias=False, dtype=dtype)
+        params["a_src_out"] = jax.random.normal(ks[5], (num_heads, hd),
+                                                dtype) * 0.1
+        # independent copy — an aliased leaf would be donated twice
+        params["a_dst_out"] = params["a_dst_in"] + 0.0
+    return params
+
+
+def _gat_attend(h: jnp.ndarray, adj: jnp.ndarray, a_src: jnp.ndarray,
+                a_dst: jnp.ndarray, num_heads: int) -> jnp.ndarray:
+    """Masked multi-head attention aggregation over in-edges of `adj`."""
+    B, N, D = h.shape
+    hd = D // num_heads
+    hh = h.reshape(B, N, num_heads, hd)
+    e_src = jnp.einsum("bnhd,hd->bnh", hh, a_src)   # score contribution of src
+    e_dst = jnp.einsum("bnhd,hd->bnh", hh, a_dst)
+    # logits[b, h, d, s] = leaky_relu(e_dst[d] + e_src[s])
+    logits = jax.nn.leaky_relu(
+        e_dst.transpose(0, 2, 1)[:, :, :, None] +
+        e_src.transpose(0, 2, 1)[:, :, None, :], 0.2)
+    neg = jnp.finfo(logits.dtype).min
+    mask = adj[:, None, :, :] > 0
+    logits = jnp.where(mask, logits, neg)
+    alpha = jax.nn.softmax(logits, axis=-1)
+    # rows with no in-edges get a uniform softmax over masked -inf -> nan-free
+    alpha = jnp.where(jnp.any(mask, axis=-1, keepdims=True), alpha, 0.0)
+    out = jnp.einsum("bhds,bshx->bdhx", alpha, hh)
+    return out.reshape(B, N, D)
+
+
+def gat_layer_apply(params: dict, eps: jnp.ndarray, adj: jnp.ndarray,
+                    node_mask: jnp.ndarray, *, num_heads: int,
+                    directed: bool = True) -> jnp.ndarray:
+    h_in = dense_apply(params["w_in"], eps)
+    agg_in = _gat_attend(h_in, adj, params["a_src_in"], params["a_dst_in"],
+                         num_heads)
+    if directed:
+        h_out = dense_apply(params["w_out"], eps)
+        agg_out = _gat_attend(h_out, jnp.swapaxes(adj, -1, -2),
+                              params["a_src_out"], params["a_dst_out"],
+                              num_heads)
+        agg = jnp.concatenate([agg_in, agg_out], axis=-1)
+    else:
+        sym = jnp.maximum(adj, jnp.swapaxes(adj, -1, -2))
+        agg = _gat_attend(h_in, sym, params["a_src_in"], params["a_dst_in"],
+                          num_heads)
+    h = dense_apply(params["proj"], agg)
+    h = jax.nn.elu(h) + eps          # residual keeps training stable
+    return h * node_mask[..., None]
+
+
+def gat_init(rng, dim: int, num_layers: int, num_heads: int, *,
+             directed: bool = True, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(rng, max(num_layers, 1))
+    return {"layers": [gat_layer_init(keys[i], dim, num_heads,
+                                      directed=directed, dtype=dtype)
+                       for i in range(num_layers)]}
+
+
+def gat_apply(params: dict, eps: jnp.ndarray, adj: jnp.ndarray,
+              node_mask: jnp.ndarray, *, num_heads: int,
+              directed: bool = True) -> jnp.ndarray:
+    for layer in params["layers"]:
+        eps = gat_layer_apply(layer, eps, adj, node_mask, num_heads=num_heads,
+                              directed=directed)
+    return eps

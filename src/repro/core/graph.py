@@ -1,0 +1,194 @@
+"""Kernel-graph IR.
+
+Two representations:
+
+* `Node` / `KernelGraph` — host-side (numpy / python) graph with full
+  static semantics. This is what the generator, importer, simulator and
+  analytical model operate on. Nodes are stored in topological order
+  (guaranteed by construction in the generator/importer) — the paper's LSTM
+  reduction runs over topologically sorted nodes.
+* `GraphBatch` — a padded, masked, device-ready pytree produced by
+  `features.encode_batch`. The adjacency is dense `[B, N, N]`
+  (`adj[b, d, s] = 1` iff edge s→d), which on TPU turns neighbor
+  aggregation into an MXU matmul (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from repro.core import opset
+from repro.core.opset import OpInfo
+
+
+@dataclass
+class Node:
+    """One tensor operation. `shape` is the output tensor shape."""
+    op: OpInfo
+    shape: tuple[int, ...]
+    dtype_bytes: int = 4
+    inputs: tuple[int, ...] = ()          # indices of producer nodes
+    is_output: bool = False
+    # contraction metadata (dot/conv): reduced dimension size
+    contract_dim: int = 0
+    # convolution filter spatial size (kh, kw) when op is CONV
+    filter_size: tuple[int, int] = (0, 0)
+    # reduction: which dims are reduced (sizes)
+    reduced_dims: tuple[int, ...] = ()
+
+    @property
+    def volume(self) -> int:
+        v = 1
+        for d in self.shape:
+            v *= int(d)
+        return int(v)
+
+    @property
+    def bytes_out(self) -> int:
+        return self.volume * self.dtype_bytes
+
+    def flops(self) -> float:
+        """Total FLOPs to produce this node's output tensor."""
+        if self.op is opset.DOT:
+            return 2.0 * self.volume * max(self.contract_dim, 1)
+        if self.op is opset.CONV:
+            kh, kw = self.filter_size
+            return 2.0 * self.volume * max(self.contract_dim, 1) * max(kh, 1) * max(kw, 1)
+        if self.op.unit in ("mem", "none"):
+            return 0.0
+        in_vol = self.volume
+        if self.reduced_dims:
+            red = 1
+            for d in self.reduced_dims:
+                red *= max(int(d), 1)
+            in_vol = self.volume * red
+        return self.op.flops_per_elem * in_vol
+
+    def transcendental_count(self) -> float:
+        if not self.op.transcendental:
+            return 0.0
+        return float(self.volume)
+
+
+@dataclass
+class KernelGraph:
+    """A kernel: a fused subgraph executed as one unit."""
+    nodes: list[Node]
+    program: str = "synthetic"           # program this kernel came from
+    name: str = "kernel"
+    tile_size: tuple[int, ...] = ()      # set per-sample for the tile task
+
+    def __post_init__(self):
+        self._check_topo()
+
+    def _check_topo(self) -> None:
+        for i, n in enumerate(self.nodes):
+            for j in n.inputs:
+                if not (0 <= j < i):
+                    raise ValueError(
+                        f"nodes must be topologically ordered; node {i} "
+                        f"({n.op.name}) has input {j}")
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.nodes)
+
+    @property
+    def root(self) -> Node:
+        """The kernel's dominant output node (last output, else last node)."""
+        for n in reversed(self.nodes):
+            if n.is_output:
+                return n
+        return self.nodes[-1]
+
+    @property
+    def output_nodes(self) -> list[Node]:
+        outs = [n for n in self.nodes if n.is_output]
+        return outs if outs else [self.nodes[-1]]
+
+    @property
+    def parameter_nodes(self) -> list[Node]:
+        return [n for n in self.nodes if n.op is opset.PARAMETER]
+
+    def edges(self) -> list[tuple[int, int]]:
+        """(src, dst) pairs."""
+        es = []
+        for d, n in enumerate(self.nodes):
+            for s in n.inputs:
+                es.append((s, d))
+        return es
+
+    def fan_out(self) -> np.ndarray:
+        fo = np.zeros((self.num_nodes,), np.int32)
+        for d, n in enumerate(self.nodes):
+            for s in n.inputs:
+                fo[s] += 1
+        return fo
+
+    def depth(self) -> int:
+        """Critical-path length (number of nodes on the longest chain)."""
+        dep = np.zeros((self.num_nodes,), np.int64)
+        for i, n in enumerate(self.nodes):
+            dep[i] = 1 + max((dep[j] for j in n.inputs), default=0)
+        return int(dep.max(initial=0))
+
+    # --- static analysis (the paper's 4 optional kernel features) -----------
+    def total_flops(self) -> float:
+        return float(sum(n.flops() for n in self.nodes))
+
+    def bytes_read(self) -> float:
+        """Bytes read from HBM: kernel inputs (parameters/constants)."""
+        return float(sum(n.bytes_out for n in self.nodes
+                         if n.op in (opset.PARAMETER, opset.CONSTANT)))
+
+    def bytes_written(self) -> float:
+        return float(sum(n.bytes_out for n in self.output_nodes))
+
+    def transcendental_total(self) -> float:
+        return float(sum(n.transcendental_count() for n in self.nodes))
+
+    def with_tile(self, tile: Sequence[int]) -> "KernelGraph":
+        g = KernelGraph(self.nodes, self.program, self.name, tuple(int(t) for t in tile))
+        return g
+
+    def renumbered(self, perm: Sequence[int]) -> "KernelGraph":
+        """Relabel nodes by `perm` (new order = [nodes[p] for p in perm]).
+
+        Only valid if the permutation preserves topological order; used by
+        tests for permutation-invariance checks at the encoding level.
+        """
+        inv = {p: i for i, p in enumerate(perm)}
+        new_nodes = []
+        for p in perm:
+            n = self.nodes[p]
+            new_nodes.append(Node(n.op, n.shape, n.dtype_bytes,
+                                  tuple(inv[j] for j in n.inputs),
+                                  n.is_output, n.contract_dim,
+                                  n.filter_size, n.reduced_dims))
+        return KernelGraph(new_nodes, self.program, self.name, self.tile_size)
+
+
+@dataclass
+class Program:
+    """A tensor program: a list of primitive ops (pre-fusion graph) or, once
+    fused, a list of kernels."""
+    name: str
+    kernels: list[KernelGraph] = field(default_factory=list)
+
+    def total_runtime(self, timer) -> float:
+        """Program runtime = Σ kernel runtimes (paper §2.1)."""
+        return float(sum(timer(k) for k in self.kernels))
+
+
+def validate_graph(g: KernelGraph, max_nodes: int | None = None) -> None:
+    if g.num_nodes == 0:
+        raise ValueError("empty kernel graph")
+    if max_nodes is not None and g.num_nodes > max_nodes:
+        raise ValueError(f"kernel has {g.num_nodes} nodes > cap {max_nodes}")
+    for i, n in enumerate(g.nodes):
+        if n.op.arity == 0 and n.inputs:
+            raise ValueError(f"node {i} ({n.op.name}) is nullary but has inputs")
+        if len(n.shape) > 6:
+            raise ValueError(f"node {i}: rank {len(n.shape)} > 6 unsupported")

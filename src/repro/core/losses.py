@@ -1,0 +1,70 @@
+"""Training objectives (paper §3.3).
+
+* Tile-size task: pairwise rank loss, Eq. (1) —
+    L = Σ_i Σ_j φ(y'_i − y'_j) · pos(y_i − y_j) / (n(n−1)/2)
+  with φ = hinge (1−z)_+ or logistic log(1+e^(−z)). Pairs are only compared
+  within the same ranking group (same kernel, different tile sizes) — group
+  ids mask cross-kernel pairs.
+
+* Fusion task: squared error on log-transformed targets (runtimes span ns→s).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _phi(z: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "hinge":
+        return jax.nn.relu(1.0 - z)
+    if kind == "logistic":
+        return jnp.log1p(jnp.exp(-z))
+    raise ValueError(f"unknown rank loss {kind!r}")
+
+
+def pairwise_rank_loss(preds: jnp.ndarray, targets: jnp.ndarray,
+                       group_ids: jnp.ndarray | None = None,
+                       valid: jnp.ndarray | None = None,
+                       *, phi: str = "hinge") -> jnp.ndarray:
+    """preds/targets: [n]. group_ids: [n] int — pairs must share a group.
+
+    pos(y_i - y_j) selects pairs where i is truly slower than j; the model is
+    pushed to predict y'_i > y'_j for those (φ penalizes small/negative
+    margins y'_i − y'_j).
+    """
+    n = preds.shape[0]
+    dz = preds[:, None] - preds[None, :]
+    dy = targets[:, None] - targets[None, :]
+    pos = (dy > 0).astype(preds.dtype)
+    pair = pos
+    if group_ids is not None:
+        same = (group_ids[:, None] == group_ids[None, :]).astype(preds.dtype)
+        pair = pair * same
+    if valid is not None:
+        v = valid.astype(preds.dtype)
+        pair = pair * v[:, None] * v[None, :]
+    diag = 1.0 - jnp.eye(n, dtype=preds.dtype)
+    pair = pair * diag
+    loss = jnp.sum(_phi(dz, phi) * pair)
+    return loss / (n * (n - 1) / 2.0)
+
+
+def log_mse_loss(preds: jnp.ndarray, targets: jnp.ndarray,
+                 valid: jnp.ndarray | None = None,
+                 *, eps: float = 1e-12) -> jnp.ndarray:
+    """preds are log-runtime estimates; targets are raw runtimes (seconds)."""
+    err = (preds - jnp.log(targets + eps)) ** 2
+    if valid is None:
+        return jnp.mean(err)
+    v = valid.astype(preds.dtype)
+    return jnp.sum(err * v) / jnp.maximum(jnp.sum(v), 1.0)
+
+
+def mse_loss(preds: jnp.ndarray, targets: jnp.ndarray,
+             valid: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Plain MSE on raw targets — the 'MSE loss (not rank)' ablation row."""
+    err = (preds - targets) ** 2
+    if valid is None:
+        return jnp.mean(err)
+    v = valid.astype(preds.dtype)
+    return jnp.sum(err * v) / jnp.maximum(jnp.sum(v), 1.0)

@@ -1,0 +1,157 @@
+"""The learned performance model (paper §3).
+
+Pipeline:
+  opcode embedding ⊕ node scalar features [⊕ kernel features (option 1)]
+    → f1 → GNN (GraphSAGE | GAT | none)
+    → node-final MLP (3 layers, Table 5)
+    → reduction (per-node | column-wise | LSTM | Transformer)
+      [⊕ kernel features (option 2)]
+    → linear head (no activation) → scalar prediction per kernel.
+
+The scalar is a log-runtime estimate for the fusion task and an arbitrary
+ranking score for the tile-size task (trained with pairwise rank loss).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, asdict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import features as F
+from repro.core import gnn as G
+from repro.core import reductions as R
+from repro.core.opset import NUM_OPCODES
+from repro.nn.core import (
+    dense_apply,
+    dense_init,
+    dropout,
+    embedding_apply,
+    embedding_init,
+    mlp_apply,
+    mlp_init,
+)
+
+
+@dataclass
+class CostModelConfig:
+    gnn: str = "graphsage"               # graphsage | gat | none
+    reduction: str = "transformer"       # per_node | column_wise | lstm | transformer
+    hidden_dim: int = 192
+    opcode_embed_dim: int = 64           # paper uses 256; scaled for CPU CI
+    gnn_layers: int = 3                  # Table 5
+    node_final_layers: int = 3           # Table 5
+    aggregator: str = "mean"             # Table 5
+    directed: bool = True                # 'vanilla'; False = ablation
+    kernel_feat_mode: str = "node"       # 'node' (option 1) | 'kernel' (option 2)
+    include_static_perf: bool = True
+    include_tile: bool = True
+    transformer_layers: int = 1
+    transformer_heads: int = 4
+    gat_heads: int = 2
+    dropout: float = 0.1
+    max_nodes: int = 64
+    use_pallas_aggregate: bool = False   # fused Pallas graph_aggregate path
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "CostModelConfig":
+        return CostModelConfig(**d)
+
+
+def cost_model_init(rng, cfg: CostModelConfig, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(rng, 8)
+    d = cfg.hidden_dim
+    in_dim = cfg.opcode_embed_dim + F.NODE_FEATURE_DIM
+    if cfg.kernel_feat_mode == "node":
+        in_dim += F.KERNEL_FEATURE_DIM
+    params = {
+        "opcode_embed": embedding_init(keys[0], NUM_OPCODES,
+                                       cfg.opcode_embed_dim, dtype=dtype),
+        "f1": dense_init(keys[1], in_dim, d, bias=False, dtype=dtype),
+        "node_final": mlp_init(keys[3], [d] * (cfg.node_final_layers + 1),
+                               bias=False, dtype=dtype),
+        "reduction": R.reduction_init(
+            keys[4], cfg.reduction, d,
+            transformer_layers=cfg.transformer_layers,
+            transformer_heads=cfg.transformer_heads, dtype=dtype),
+    }
+    if cfg.gnn == "graphsage":
+        params["gnn"] = G.sage_init(keys[2], d, cfg.gnn_layers,
+                                    directed=cfg.directed, dtype=dtype)
+    elif cfg.gnn == "gat":
+        params["gnn"] = G.gat_init(keys[2], d, max(cfg.gnn_layers, 1),
+                                   cfg.gat_heads, directed=cfg.directed,
+                                   dtype=dtype)
+    elif cfg.gnn != "none":
+        raise ValueError(f"unknown gnn {cfg.gnn!r}")
+
+    if cfg.reduction == "per_node":
+        params["node_head"] = dense_init(keys[5], d, 1, bias=False, dtype=dtype)
+        if cfg.kernel_feat_mode == "kernel":
+            params["kernel_head"] = dense_init(
+                keys[6], F.KERNEL_FEATURE_DIM, 1, bias=False, dtype=dtype)
+    else:
+        out_dim = R.reduction_out_dim(cfg.reduction, d)
+        if cfg.kernel_feat_mode == "kernel":
+            out_dim += F.KERNEL_FEATURE_DIM
+        params["head"] = dense_init(keys[5], out_dim, 1, bias=False, dtype=dtype)
+    return params
+
+
+def cost_model_apply(params: dict, cfg: CostModelConfig, batch,
+                     *, rng=None, deterministic: bool = True) -> jnp.ndarray:
+    """batch: features.GraphBatch (pytree). Returns predictions [B]."""
+    opcodes = batch.opcodes
+    node_feats = batch.node_feats
+    adj = batch.adj
+    mask = batch.node_mask
+    kfeats = batch.kernel_feats
+
+    if not cfg.include_tile:
+        kfeats = kfeats.at[:, F.TILE_SLICE].set(0.0)
+    if not cfg.include_static_perf:
+        kfeats = kfeats.at[:, F.STATIC_PERF_SLICE].set(0.0)
+
+    emb = embedding_apply(params["opcode_embed"], opcodes)      # [B,N,E]
+    x = jnp.concatenate([emb, node_feats], axis=-1)
+    if cfg.kernel_feat_mode == "node":
+        B, N = opcodes.shape
+        kf = jnp.broadcast_to(kfeats[:, None, :], (B, N, kfeats.shape[-1]))
+        x = jnp.concatenate([x, kf], axis=-1)
+
+    eps = jax.nn.relu(dense_apply(params["f1"], x)) * mask[..., None]
+
+    if cfg.gnn == "graphsage":
+        eps = G.sage_apply(params["gnn"], eps, adj, mask,
+                           aggregator=cfg.aggregator, directed=cfg.directed,
+                           use_pallas=cfg.use_pallas_aggregate)
+    elif cfg.gnn == "gat":
+        eps = G.gat_apply(params["gnn"], eps, adj, mask,
+                          num_heads=cfg.gat_heads, directed=cfg.directed)
+
+    sub = None if rng is None else jax.random.fold_in(rng, 1)
+    eps = dropout(sub, eps, cfg.dropout, deterministic)
+    eps = mlp_apply(params["node_final"], eps, final_act=True)
+    eps = eps * mask[..., None]
+
+    if cfg.reduction == "per_node":
+        per_node = dense_apply(params["node_head"], eps)[..., 0]  # [B,N]
+        y = jnp.sum(per_node * mask, axis=1)
+        if cfg.kernel_feat_mode == "kernel":
+            y = y + dense_apply(params["kernel_head"], kfeats)[..., 0]
+        return y
+
+    kappa = R.reduction_apply(params["reduction"], cfg.reduction, eps, mask,
+                              transformer_heads=cfg.transformer_heads,
+                              rng=rng, dropout_rate=cfg.dropout,
+                              deterministic=deterministic)
+    if cfg.kernel_feat_mode == "kernel":
+        kappa = jnp.concatenate([kappa, kfeats], axis=-1)
+    return dense_apply(params["head"], kappa)[..., 0]
+
+
+def param_count(params) -> int:
+    return int(sum(x.size for x in jax.tree_util.tree_leaves(params)))

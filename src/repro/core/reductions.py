@@ -1,0 +1,74 @@
+"""Node-embedding → kernel-embedding reductions (paper §3.2).
+
+Four options, all mask-aware:
+  * per-node:     scalar head per node, summed (no kernel embedding)
+  * column-wise:  concat(masked mean, masked max) — Table 5's fixed choice
+  * LSTM:         final state over topologically sorted node embeddings
+  * Transformer:  encoder over node embeddings, sum-reduced (Table 5)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.core import dense_apply, dense_init
+from repro.nn.lstm import lstm_apply, lstm_init
+from repro.nn.transformer import encoder_apply, encoder_init
+
+REDUCTIONS = ("per_node", "column_wise", "lstm", "transformer")
+
+
+def reduction_init(rng, kind: str, dim: int, *, transformer_layers: int = 1,
+                   transformer_heads: int = 4, dtype=jnp.float32) -> dict:
+    if kind == "per_node":
+        return {}
+    if kind == "column_wise":
+        return {}
+    if kind == "lstm":
+        return {"lstm": lstm_init(rng, dim, dim, dtype)}
+    if kind == "transformer":
+        return {"encoder": encoder_init(rng, dim, transformer_heads,
+                                        transformer_layers, dtype=dtype)}
+    raise ValueError(f"unknown reduction {kind!r}")
+
+
+def reduction_out_dim(kind: str, dim: int) -> int:
+    if kind == "column_wise":
+        return 2 * dim
+    if kind == "per_node":
+        return 0      # per-node predicts directly; no kernel embedding
+    return dim
+
+
+def masked_mean(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    s = jnp.sum(x * mask[..., None], axis=1)
+    n = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+    return s / n
+
+
+def masked_max(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    neg = jnp.finfo(x.dtype).min
+    xm = jnp.where(mask[..., None] > 0, x, neg)
+    return jnp.max(xm, axis=1)
+
+
+def reduction_apply(params: dict, kind: str, eps: jnp.ndarray,
+                    node_mask: jnp.ndarray, *, transformer_heads: int = 4,
+                    rng=None, dropout_rate: float = 0.0,
+                    deterministic: bool = True) -> jnp.ndarray:
+    """eps: [B, N, D] -> kernel embedding [B, out_dim].
+
+    per_node is handled in model.py (it never builds a kernel embedding).
+    """
+    if kind == "column_wise":
+        return jnp.concatenate(
+            [masked_mean(eps, node_mask), masked_max(eps, node_mask)], axis=-1)
+    if kind == "lstm":
+        return lstm_apply(params["lstm"], eps, node_mask)
+    if kind == "transformer":
+        enc = encoder_apply(params["encoder"], eps, node_mask,
+                            transformer_heads, rng=rng,
+                            dropout_rate=dropout_rate,
+                            deterministic=deterministic)
+        return jnp.sum(enc * node_mask[..., None], axis=1)   # Table 5: sum
+    raise ValueError(f"unknown reduction {kind!r}")

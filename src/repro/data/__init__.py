@@ -1,0 +1,21 @@
+"""Data substrate: program corpus generation, fusion machinery, tile/fusion
+dataset construction, splits, and balanced batch sampling."""
+from repro.data.fusion import (
+    FusionDecision,
+    apply_fusion,
+    default_fusion,
+    fusable_edges,
+    random_fusion,
+)
+from repro.data.synthetic import FAMILIES, generate_corpus, generate_program
+from repro.data.tile_dataset import enumerate_tiles, build_tile_dataset
+from repro.data.fusion_dataset import build_fusion_dataset
+from repro.data.corpus import split_programs, kernel_hash
+from repro.data.sampler import BalancedSampler, TileBatchSampler
+
+__all__ = [
+    "FusionDecision", "apply_fusion", "default_fusion", "fusable_edges",
+    "random_fusion", "FAMILIES", "generate_corpus", "generate_program",
+    "enumerate_tiles", "build_tile_dataset", "build_fusion_dataset",
+    "split_programs", "kernel_hash", "BalancedSampler", "TileBatchSampler",
+]

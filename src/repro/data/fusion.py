@@ -1,0 +1,173 @@
+"""Operator-fusion machinery (paper §2.2, fusion task).
+
+A *fusion configuration* is a boolean decision per fusable edge of a
+pre-fusion program graph. Fused edges merge producer/consumer into one
+kernel (intermediate stays in scratchpad); groups are the connected
+components of the fused-edge subgraph, subject to XLA-like validity rules:
+
+  * non-fusible ops (sort, top-k, collectives) stay alone,
+  * at most one contraction (dot/conv) per group — it roots the fusion;
+    elementwise epilogues may fuse *after* it, producers may not fuse into
+    its contraction input (loop structures differ),
+  * groups are capped at `max_group` nodes (model input budget).
+
+`apply_fusion` materializes each group as a `KernelGraph`: external inputs
+become PARAMETER nodes, nodes consumed outside the group (or program
+outputs) are marked `is_output`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import opset
+from repro.core.graph import KernelGraph, Node
+
+
+@dataclass(frozen=True)
+class FusionDecision:
+    """Decisions over `edges` (aligned with `fusable_edges(graph)`)."""
+    fuse: tuple[bool, ...]
+
+    def flip(self, i: int) -> "FusionDecision":
+        f = list(self.fuse)
+        f[i] = not f[i]
+        return FusionDecision(tuple(f))
+
+
+def fusable_edges(g: KernelGraph) -> list[tuple[int, int]]:
+    """Edges (src, dst) that *may* be fused."""
+    out = []
+    for s, d in g.edges():
+        ns, nd = g.nodes[s], g.nodes[d]
+        if ns.op in (opset.PARAMETER, opset.CONSTANT):
+            continue
+        if not ns.op.fusible or not nd.op.fusible:
+            continue
+        # producers may not fuse INTO a contraction's input
+        if nd.op.fusion_root_only:
+            continue
+        out.append((s, d))
+    return out
+
+
+class _UnionFind:
+    def __init__(self, n: int):
+        self.p = list(range(n))
+
+    def find(self, x: int) -> int:
+        while self.p[x] != x:
+            self.p[x] = self.p[self.p[x]]
+            x = self.p[x]
+        return x
+
+    def union(self, a: int, b: int) -> None:
+        ra, rb = self.find(a), self.find(b)
+        if ra != rb:
+            self.p[rb] = ra
+
+
+def _group_nodes(g: KernelGraph, decisions: FusionDecision,
+                 max_group: int) -> list[list[int]]:
+    edges = fusable_edges(g)
+    assert len(edges) == len(decisions.fuse), \
+        f"{len(edges)} fusable edges vs {len(decisions.fuse)} decisions"
+    uf = _UnionFind(g.num_nodes)
+
+    def group_of(root: int) -> list[int]:
+        return [i for i in range(g.num_nodes) if uf.find(i) == root]
+
+    def contractions(nodes: list[int]) -> int:
+        return sum(1 for i in nodes if g.nodes[i].op.fusion_root_only)
+
+    # greedy union in edge order, re-checking validity per union
+    for (s, d), fuse in zip(edges, decisions.fuse):
+        if not fuse:
+            continue
+        rs, rd = uf.find(s), uf.find(d)
+        if rs == rd:
+            continue
+        ga, gb = group_of(rs), group_of(rd)
+        if len(ga) + len(gb) > max_group:
+            continue
+        if contractions(ga) + contractions(gb) > 1:
+            continue
+        uf.union(s, d)
+
+    groups: dict[int, list[int]] = {}
+    for i in range(g.num_nodes):
+        if g.nodes[i].op in (opset.PARAMETER, opset.CONSTANT):
+            continue
+        groups.setdefault(uf.find(i), []).append(i)
+    return [sorted(v) for v in sorted(groups.values(), key=lambda v: v[0])]
+
+
+def apply_fusion(g: KernelGraph, decisions: FusionDecision,
+                 max_group: int = 48) -> list[KernelGraph]:
+    """Materialize the fused kernels for a program under `decisions`."""
+    groups = _group_nodes(g, decisions, max_group)
+    member = {}
+    for gi, nodes in enumerate(groups):
+        for i in nodes:
+            member[i] = gi
+
+    consumers: dict[int, set[int]] = {i: set() for i in range(g.num_nodes)}
+    for d, n in enumerate(g.nodes):
+        for s in n.inputs:
+            consumers[s].add(d)
+
+    kernels = []
+    for gi, nodes in enumerate(groups):
+        node_set = set(nodes)
+        local: dict[int, int] = {}
+        knodes: list[Node] = []
+        # external inputs -> parameters, in deterministic order
+        ext_inputs: list[int] = []
+        for i in nodes:
+            for s in g.nodes[i].inputs:
+                if s not in node_set and s not in ext_inputs:
+                    ext_inputs.append(s)
+        for s in ext_inputs:
+            src = g.nodes[s]
+            local[s] = len(knodes)
+            knodes.append(Node(opset.PARAMETER, src.shape, src.dtype_bytes))
+        for i in nodes:
+            n = g.nodes[i]
+            is_out = n.is_output or any(c not in node_set
+                                        for c in consumers[i])
+            local[i] = len(knodes)
+            knodes.append(Node(n.op, n.shape, n.dtype_bytes,
+                               tuple(local[s] for s in n.inputs), is_out,
+                               n.contract_dim, n.filter_size, n.reduced_dims))
+        kernels.append(KernelGraph(knodes, program=g.program,
+                                   name=f"{g.name}/k{gi}"))
+    return kernels
+
+
+def default_fusion(g: KernelGraph, max_group: int = 48) -> FusionDecision:
+    """The compiler's greedy heuristic: fuse every edge whose producer is
+    cheap to keep in scratch (elementwise/broadcast/reduce chains), don't
+    fuse across expensive producers. This is the paper's 'default
+    configuration' starting point."""
+    edges = fusable_edges(g)
+    fuse = []
+    for s, d in edges:
+        ns = g.nodes[s]
+        cheap = ns.op.elementwise or ns.op.unit == "mem" or \
+            ns.op.name.startswith("reduce")
+        fuse.append(bool(cheap))
+    return FusionDecision(tuple(fuse))
+
+
+def random_fusion(g: KernelGraph, rng: np.random.Generator,
+                  p: float | None = None) -> FusionDecision:
+    """Random search move used to build the fusion dataset (paper §4)."""
+    edges = fusable_edges(g)
+    if p is None:
+        p = float(rng.uniform(0.1, 0.9))
+    return FusionDecision(tuple(bool(x) for x in rng.random(len(edges)) < p))
+
+
+def no_fusion(g: KernelGraph) -> FusionDecision:
+    return FusionDecision(tuple(False for _ in fusable_edges(g)))

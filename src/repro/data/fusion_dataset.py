@@ -1,0 +1,65 @@
+"""Fusion dataset (paper §4, 'Fusion Dataset').
+
+For each program, run random-search fusion configuration generation (the
+paper's data-collection strategy), decompose into kernels, measure each with
+the hardware oracle, and de-duplicate structurally identical kernels.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.graph import KernelGraph
+from repro.core.simulator import TPUSimulator
+from repro.data.corpus import kernel_hash
+from repro.data.fusion import apply_fusion, default_fusion, random_fusion
+
+
+@dataclass
+class FusionKernelRecord:
+    kernel: KernelGraph
+    runtime: float                     # seconds, min of 3 runs
+    program: str = ""
+
+
+@dataclass
+class FusionDataset:
+    records: list[FusionKernelRecord] = field(default_factory=list)
+
+    @property
+    def num_samples(self) -> int:
+        return len(self.records)
+
+    def programs(self) -> list[str]:
+        return sorted({r.program for r in self.records})
+
+    def by_program(self) -> dict[str, list[FusionKernelRecord]]:
+        out: dict[str, list[FusionKernelRecord]] = {}
+        for r in self.records:
+            out.setdefault(r.program, []).append(r)
+        return out
+
+
+def build_fusion_dataset(programs: list[KernelGraph], sim: TPUSimulator,
+                         *, configs_per_program: int = 24,
+                         max_kernel_nodes: int = 64,
+                         seed: int = 0) -> FusionDataset:
+    ds = FusionDataset()
+    seen: set[str] = set()
+    rng = np.random.default_rng(seed)
+    for prog in programs:
+        decisions = [default_fusion(prog)]
+        for _ in range(configs_per_program - 1):
+            decisions.append(random_fusion(prog, rng))
+        for dec in decisions:
+            for k in apply_fusion(prog, dec):
+                if k.num_nodes > max_kernel_nodes:
+                    continue
+                h = kernel_hash(k)
+                if h in seen:
+                    continue
+                seen.add(h)
+                ds.records.append(FusionKernelRecord(
+                    kernel=k, runtime=sim.measure(k), program=prog.program))
+    return ds

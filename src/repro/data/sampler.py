@@ -1,0 +1,148 @@
+"""Balanced, deterministic, shard-aware batch sampling.
+
+* Balanced: the paper draws examples evenly per program ("model type") to
+  counter corpus imbalance; we sample programs uniformly, then kernels.
+* Deterministic: the batch at step k is a pure function of (seed, step,
+  host shard) — a preempted-and-restarted worker reproduces its exact batch
+  stream, which the fault-tolerance tests rely on.
+* Shard-aware: with H data-parallel hosts, host h draws the h-th shard of
+  each step's batch. `ShardPlanner` reassigns shards away from hosts flagged
+  as stragglers (deterministically), so a slow host's work is taken over by
+  backups without coordination.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import features as F
+from repro.core.features import FeatureNormalizer, GraphBatch, encode_batch
+
+
+@dataclass
+class TileBatch:
+    graphs: GraphBatch
+    targets: np.ndarray      # [B] seconds
+    group_ids: np.ndarray    # [B] int32 — same kernel => same group
+    valid: np.ndarray        # [B] float32
+
+
+@dataclass
+class FusionBatch:
+    graphs: GraphBatch
+    targets: np.ndarray      # [B] seconds
+    valid: np.ndarray        # [B] float32
+
+
+class TileBatchSampler:
+    """Yields batches of (kernel, tile) samples grouped for the rank loss."""
+
+    def __init__(self, records, normalizer: FeatureNormalizer, *,
+                 kernels_per_batch: int = 4, configs_per_kernel: int = 16,
+                 max_nodes: int = 64, seed: int = 0, host_id: int = 0,
+                 num_hosts: int = 1):
+        if not records:
+            raise ValueError("empty tile dataset")
+        self.records = records
+        self.normalizer = normalizer
+        self.kernels_per_batch = kernels_per_batch
+        self.configs_per_kernel = configs_per_kernel
+        self.max_nodes = max_nodes
+        self.seed = seed
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+        self._by_program: dict[str, list[int]] = {}
+        for i, r in enumerate(records):
+            self._by_program.setdefault(r.program, []).append(i)
+        self._programs = sorted(self._by_program)
+
+    @property
+    def batch_size(self) -> int:
+        return self.kernels_per_batch * self.configs_per_kernel
+
+    def batch(self, step: int) -> TileBatch:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.host_id]))
+        graphs, targets, groups, valid = [], [], [], []
+        for ki in range(self.kernels_per_batch):
+            prog = self._programs[int(rng.integers(len(self._programs)))]
+            rec = self.records[int(rng.choice(self._by_program[prog]))]
+            n_cfg = len(rec.tiles)
+            take = min(self.configs_per_kernel, n_cfg)
+            idx = rng.choice(n_cfg, take, replace=False)
+            for j in idx:
+                graphs.append(rec.kernel.with_tile(rec.tiles[int(j)]))
+                targets.append(float(rec.runtimes[int(j)]))
+                groups.append(ki)
+                valid.append(1.0)
+            for _ in range(self.configs_per_kernel - take):   # pad group
+                graphs.append(rec.kernel.with_tile(rec.tiles[0]))
+                targets.append(float(rec.runtimes[0]))
+                groups.append(ki)
+                valid.append(0.0)
+        gb = encode_batch(graphs, self.max_nodes, self.normalizer)
+        return TileBatch(gb, np.asarray(targets, np.float32),
+                         np.asarray(groups, np.int32),
+                         np.asarray(valid, np.float32))
+
+
+class BalancedSampler:
+    """Fusion-task sampler: batch of kernels balanced across programs."""
+
+    def __init__(self, records, normalizer: FeatureNormalizer, *,
+                 batch_size: int = 64, max_nodes: int = 64, seed: int = 0,
+                 host_id: int = 0, num_hosts: int = 1):
+        if not records:
+            raise ValueError("empty fusion dataset")
+        self.records = records
+        self.normalizer = normalizer
+        self.batch_size = batch_size
+        self.max_nodes = max_nodes
+        self.seed = seed
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+        self._by_program: dict[str, list[int]] = {}
+        for i, r in enumerate(records):
+            self._by_program.setdefault(r.program, []).append(i)
+        self._programs = sorted(self._by_program)
+
+    def batch(self, step: int) -> FusionBatch:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.host_id]))
+        graphs, targets = [], []
+        for _ in range(self.batch_size):
+            prog = self._programs[int(rng.integers(len(self._programs)))]
+            rec = self.records[int(rng.choice(self._by_program[prog]))]
+            graphs.append(rec.kernel)
+            targets.append(rec.runtime)
+        gb = encode_batch(graphs, self.max_nodes, self.normalizer)
+        return FusionBatch(gb, np.asarray(targets, np.float32),
+                           np.ones((self.batch_size,), np.float32))
+
+
+class ShardPlanner:
+    """Deterministic shard→host assignment with straggler takeover.
+
+    Each step has `num_hosts` shards. Healthy path: shard i → host i. When
+    hosts are flagged slow, their shards are deterministically reassigned to
+    the healthy host with the fewest shards (ties broken by host id), so all
+    data is still consumed exactly once per step.
+    """
+
+    def __init__(self, num_hosts: int):
+        self.num_hosts = num_hosts
+
+    def plan(self, step: int, slow_hosts: frozenset[int] = frozenset()
+             ) -> dict[int, list[int]]:
+        healthy = [h for h in range(self.num_hosts) if h not in slow_hosts]
+        if not healthy:
+            raise RuntimeError("no healthy hosts")
+        assign: dict[int, list[int]] = {h: [] for h in healthy}
+        for shard in range(self.num_hosts):
+            if shard in slow_hosts:
+                tgt = min(healthy, key=lambda h: (len(assign[h]), h))
+            else:
+                tgt = shard
+            assign[tgt].append(shard)
+        return assign

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships three files:
+  kernel.py - pl.pallas_call body + explicit BlockSpec VMEM tiling
+  ops.py    - the jit'd public wrapper (+ block-shape candidates for the
+              tile-size autotuner)
+  ref.py    - pure-jnp oracle used by the allclose test sweeps
+
+Kernels target TPU; on this CPU container they are validated with
+interpret=True (the dry-run lowers the jnp paths instead; see DESIGN.md).
+"""

@@ -1,0 +1,127 @@
+"""Flash attention Pallas TPU kernel.
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks) — the kv axis is the
+minor (sequential) grid dimension, so the online-softmax state (running max,
+normalizer, accumulator) lives in VMEM scratch and is carried across kv
+steps; the output block is emitted at the last kv step.
+
+BlockSpecs (all VMEM):
+  q   [1, 1, block_q, head_dim]   index (b, h, iq, 0)
+  k/v [1, 1, block_k, head_dim]   index (b, h // rep, ik, 0)  — GQA without
+                                  materializing repeated KV heads
+  out [1, 1, block_q, head_dim]   index (b, h, iq, 0)
+
+Supports causal masking and sliding-window attention; blocks fully outside
+the causal window are masked (grid shapes are static — a block-skip via a
+sparser grid is a known further optimization, noted in EXPERIMENTS §Perf).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 block_q: int, block_k: int, seq_q: int, seq_k: int,
+                 causal: bool, window: int | None, q_offset: int,
+                 num_kv_blocks: int, scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # [bq, hd]
+    k = k_ref[0, 0].astype(jnp.float32)                    # [bk, hd]
+    v = v_ref[0, 0].astype(jnp.float32)                    # [bk, hd]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [bq, bk]
+
+    q_pos = q_offset + iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    valid = k_pos < seq_k
+    if causal:
+        valid = valid & (k_pos <= q_pos)
+    if window is not None:
+        valid = valid & (q_pos - k_pos < window)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + \
+        jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                         causal: bool = True, window: int | None = None,
+                         q_offset: int = 0, block_q: int = 128,
+                         block_k: int = 128,
+                         interpret: bool = False) -> jnp.ndarray:
+    """q: [B, H, Sq, hd]; k, v: [B, KH, Sk, hd]; H % KH == 0."""
+    B, H, Sq, hd = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    assert H % KH == 0, (H, KH)
+    rep = H // KH
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    nq = -(-Sq // block_q)
+    nk = -(-Sk // block_k)
+    pad_q = nq * block_q - Sq
+    pad_k = nk * block_k - Sk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    kernel = functools.partial(
+        _attn_kernel, block_q=block_q, block_k=block_k, seq_q=Sq, seq_k=Sk,
+        causal=causal, window=window, q_offset=q_offset, num_kv_blocks=nk,
+        scale=1.0 / math.sqrt(hd))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik: (b, h // rep, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik: (b, h // rep, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nq * block_q, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq, :]

@@ -1,0 +1,33 @@
+"""Public wrapper for the flash-attention kernel + autotuner hooks."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "q_offset", "block_q",
+                                   "block_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int | None = None,
+                    q_offset: int = 0, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: [B,S,H,hd]; k,v: [B,S,KH,hd] (model layout). Returns [B,S,H,hd]."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               q_offset=q_offset, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+def block_candidates(seq_q: int, seq_k: int) -> list[tuple[int, int]]:
+    """(block_q, block_k) candidates for the tile-size autotuner."""
+    qs = [b for b in (64, 128, 256, 512) if b <= max(seq_q, 64)]
+    ks = [b for b in (128, 256, 512, 1024) if b <= max(seq_k, 128)]
+    return [(bq, bk) for bq in qs for bk in ks]

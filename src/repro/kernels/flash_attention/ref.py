@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for flash attention: dense masked softmax attention.
+
+Deliberately independent of repro.models.layers (a separate derivation so a
+shared bug can't hide)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import jax
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  q_offset: int = 0) -> jnp.ndarray:
+    """q: [B,H,Sq,hd]; k,v: [B,KH,Sk,hd]. Returns [B,H,Sq,hd] (q.dtype)."""
+    B, H, Sq, hd = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    rep = H // KH
+    kf = jnp.repeat(k.astype(jnp.float32), rep, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), rep, axis=1)
+    qf = q.astype(jnp.float32) / math.sqrt(hd)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    valid = jnp.ones((Sq, Sk), bool)
+    if causal:
+        valid = valid & (k_pos <= q_pos)
+    if window is not None:
+        valid = valid & (q_pos - k_pos < window)
+    s = jnp.where(valid[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    return out.astype(q.dtype)

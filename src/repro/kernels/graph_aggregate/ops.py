@@ -1,0 +1,22 @@
+"""Public wrapper for the fused GNN aggregation kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.graph_aggregate.kernel import graph_aggregate_bnd
+
+
+@partial(jax.jit, static_argnames=("act", "mean", "block_f", "interpret"))
+def graph_aggregate(adj: jnp.ndarray, x: jnp.ndarray, w: jnp.ndarray, *,
+                    act: str = "relu", mean: bool = True, block_f: int = 256,
+                    interpret: bool = False) -> jnp.ndarray:
+    return graph_aggregate_bnd(adj, x, w, act=act, mean=mean,
+                               block_f=block_f, interpret=interpret)
+
+
+def block_candidates(hidden: int) -> list[int]:
+    """block_f candidates for the tile-size autotuner."""
+    return [b for b in (64, 128, 256, 512, 1024) if b <= max(hidden, 64)]

@@ -1,0 +1,72 @@
+"""Mamba2 SSD inter-chunk state-recurrence Pallas TPU kernel.
+
+Given per-chunk input-state contributions S [B, nc, H, N, P] and per-chunk
+decays d [B, nc, H] (exp of summed log-decay within the chunk), computes
+
+    h_0 = h_init;   h_{c+1} = d_c * h_c + S_c
+
+emitting the state *before* each chunk (what Y_inter consumes) plus the
+final state (the decode cache). The chunk axis is the minor grid dimension:
+the running state lives in VMEM scratch across grid steps — this is the
+sequential dependence that XLA cannot parallelize, so keeping it resident
+in VMEM (instead of one HBM round-trip per chunk, as the lax.scan HLO does)
+is the win.
+
+Grid: (B, H, nc). BlockSpecs:
+  S   [1, nc_blk=1, 1, N, P]  index (b, c, h, 0, 0)
+  d   [1, 1, 1]               index (b, c, h)
+  out [1, 1, 1, N, P]         index (b, c, h, 0, 0)
+VMEM per step ≈ 2·N·P floats (N=128, P=64 → 64 KB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(s_ref, d_ref, hout_ref, hfin_ref, h_scr, *, num_chunks: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    # emit the state BEFORE this chunk
+    hout_ref[0, 0, 0] = h_scr[...].astype(hout_ref.dtype)
+    d = d_ref[0, 0, 0].astype(jnp.float32)
+    h_scr[...] = h_scr[...] * d + s_ref[0, 0, 0].astype(jnp.float32)
+
+    @pl.when(c == num_chunks - 1)
+    def _final():
+        hfin_ref[0, 0] = h_scr[...].astype(hfin_ref.dtype)
+
+
+def ssd_scan_bchnp(S: jnp.ndarray, d: jnp.ndarray, *,
+                   interpret: bool = False):
+    """S: [B, nc, H, N, P]; d: [B, nc, H].
+    Returns (h_before [B, nc, H, N, P], h_final [B, H, N, P])."""
+    B, nc, H, N, P = S.shape
+    kernel = functools.partial(_kernel, num_chunks=nc)
+    h_before, h_final = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, N, P), lambda b, h, c: (b, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, h, c: (b, c, h)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, N, P), lambda b, h, c: (b, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc, H, N, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(S, d)
+    return h_before, h_final

@@ -1,0 +1,25 @@
+"""Public wrapper for the SSD inter-chunk scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_bchnp
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ssd_scan(S: jnp.ndarray, d: jnp.ndarray, *, interpret: bool = False):
+    return ssd_scan_bchnp(S, d, interpret=interpret)
+
+
+def block_candidates(d_state: int, head_dim: int) -> list[tuple[int, int]]:
+    """(N, P) VMEM tile candidates — here the state block is the whole
+    (N, P) face; candidates vary the chunk length upstream instead."""
+    return [(d_state, head_dim)]
+
+
+def chunk_candidates(seq: int) -> list[int]:
+    """SSD chunk-length candidates for the tile-size autotuner."""
+    return [c for c in (64, 128, 256, 512) if c <= seq and seq % c == 0]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the SSD inter-chunk recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(S: jnp.ndarray, d: jnp.ndarray):
+    """S: [B, nc, H, N, P]; d: [B, nc, H].
+    Returns (h_before [B, nc, H, N, P], h_final [B, H, N, P])."""
+    def step(h, inp):
+        s_c, d_c = inp
+        h_new = h * d_c[..., None, None] + s_c
+        return h_new, h
+
+    B, nc, H, N, P = S.shape
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    hT, h_before = jax.lax.scan(
+        step, h0, (S.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+                   d.transpose(1, 0, 2).astype(jnp.float32)))
+    return h_before.transpose(1, 0, 2, 3, 4), hT

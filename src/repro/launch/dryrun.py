@@ -1,0 +1,120 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run driver.
+
+For every (architecture × applicable input shape × mesh) cell:
+lower + compile the step under the production mesh, print
+memory_analysis() (proves the per-device footprint) and cost_analysis()
+(FLOPs/bytes for §Roofline), and persist a JSON record under
+experiments/dryrun/ that the roofline pass and EXPERIMENTS.md read.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun               # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi  # 2-pod pass
+"""
+import argparse
+import json
+import time
+import traceback
+
+
+def main() -> int:
+    import jax
+    from repro.launch.lowering import lower_cell
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import SHAPES, registry, shape_applicable
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default all)")
+    ap.add_argument("--shape", default=None, help="one shape (default all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--fail-fast", action="store_true")
+    args = ap.parse_args()
+
+    assert jax.device_count() == 512, jax.device_count()
+    archs = [args.arch] if args.arch else registry.list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for multi_pod in meshes:
+        mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        for arch in archs:
+            cfg = registry.get_config(arch)
+            for shape_name in shapes:
+                shape = SHAPES[shape_name]
+                ok, why = shape_applicable(cfg, shape)
+                path = os.path.join(args.out,
+                                    f"{mesh_name}__{arch}__{shape_name}.json")
+                if not ok:
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "status": "skipped",
+                           "reason": why}
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    print(f"[skip] {mesh_name} {arch} {shape_name}: {why}")
+                    continue
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        prev = json.load(f)
+                    if prev.get("status") == "ok":
+                        print(f"[cached] {mesh_name} {arch} {shape_name}")
+                        continue
+                t0 = time.time()
+                try:
+                    cell = lower_cell(arch, cfg, shape, mesh, mesh_name)
+                    mem = cell.memory_analysis
+                    rec = {
+                        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                        "status": "ok",
+                        "devices": mesh.devices.size,
+                        "compile_s": round(time.time() - t0, 1),
+                        "params_bytes": cell.params_bytes,
+                        "memory": {
+                            k: int(getattr(mem, k))
+                            for k in ("argument_size_in_bytes",
+                                      "output_size_in_bytes",
+                                      "temp_size_in_bytes",
+                                      "alias_size_in_bytes",
+                                      "peak_memory_in_bytes",
+                                      "generated_code_size_in_bytes")
+                            if hasattr(mem, k)
+                        },
+                        "cost": {k: float(v)
+                                 for k, v in cell.cost_analysis.items()
+                                 if isinstance(v, (int, float))},
+                        "collectives": cell.collective_bytes,
+                    }
+                    print(f"[ok]   {mesh_name} {arch} {shape_name} "
+                          f"compile={rec['compile_s']}s "
+                          f"flops={rec['cost'].get('flops', 0):.3e}")
+                    print(f"       memory_analysis: {rec['memory']}")
+                except Exception as e:            # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    failures.append((mesh_name, arch, shape_name, e))
+                    print(f"[FAIL] {mesh_name} {arch} {shape_name}: "
+                          f"{type(e).__name__}: {str(e)[:400]}")
+                    if args.fail_fast:
+                        with open(path, "w") as f:
+                            json.dump(rec, f, indent=1)
+                        return 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+    print(f"\ndry-run complete: {len(failures)} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,163 @@
+"""Cell lowering: build (step_fn, abstract args, shardings) for any
+(architecture × input shape × mesh) and lower+compile it — shared by the
+dry-run driver, the roofline pass, and the sharding tests."""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import activation_mapping
+from repro.models import lm
+from repro.models.config import ModelConfig, ShapeSpec
+from repro.models.inputs import input_specs
+from repro.sharding import partition
+from repro.sharding.context import activation_sharding
+
+
+@dataclass
+class LoweredCell:
+    arch: str
+    shape: str
+    mesh_name: str
+    lowered: object
+    compiled: object
+    memory_analysis: object
+    cost_analysis: dict
+    collective_bytes: dict
+    params_bytes: int
+
+
+def _named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh):
+    """Returns (fn, args_abstract, in_shardings, out_shardings)."""
+    p_abs = lm.init_abstract(cfg)
+    p_specs = partition.param_specs(cfg, p_abs, mesh)
+    batch_abs = input_specs(cfg, shape)
+    b_specs = partition.batch_specs(batch_abs, mesh)
+
+    if shape.kind == "train":
+        opt_init, _ = lm.make_optimizer(cfg)
+        o_abs = jax.eval_shape(opt_init, p_abs)
+        o_specs = partition.opt_specs(p_specs, p_abs, o_abs)
+        fn = lm.train_step_fn(cfg)
+        args = (p_abs, o_abs, batch_abs)
+        in_sh = (p_specs, o_specs, b_specs)
+        out_sh = (p_specs, o_specs, None)
+    elif shape.kind == "prefill":
+        fn = lm.prefill_step_fn(cfg, capacity=shape.seq_len)
+        cache_abs = lm.cache_abstract(cfg, shape.global_batch, shape.seq_len)
+        c_specs = partition.cache_specs(cfg, cache_abs, mesh,
+                                        batch_size=shape.global_batch)
+        args = (p_abs, batch_abs)
+        in_sh = (p_specs, b_specs)
+        out_sh = (None, c_specs)
+    elif shape.kind == "decode":
+        fn = lm.decode_step_fn(cfg)
+        cache_abs = lm.cache_abstract(cfg, shape.global_batch, shape.seq_len)
+        c_specs = partition.cache_specs(cfg, cache_abs, mesh,
+                                        batch_size=shape.global_batch)
+        dp = partition.mesh_dp_axes(mesh)
+        tok_spec = P(dp, None) if shape.global_batch > 1 else P(None, None)
+        args = (p_abs, cache_abs,
+                jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32))
+        in_sh = (p_specs, c_specs, tok_spec, P())
+        out_sh = (None, c_specs)
+    else:
+        raise ValueError(shape.kind)
+    return fn, args, in_sh, out_sh
+
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:\S+\s*=\s*)?((?:\w+\[[^\]]*\]|\(.*?\)))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.MULTILINE)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in (SPMD-partitioned,
+    per-device) HLO. '-start' ops only (avoid double count with '-done')."""
+    out: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?\S+\s*=\s*(.+?)\s*"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)(-start|-done)?\(", s)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue
+        ty, op = m.group(1), m.group(2)
+        b = _shape_bytes(ty)
+        out[op] = out.get(op, 0.0) + b
+        count[op] = count.get(op, 0) + 1
+    out["_counts"] = count
+    return out
+
+
+def lower_cell(arch: str, cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+               mesh_name: str, *, compile_: bool = True) -> LoweredCell:
+    fn, args, in_sh, out_sh = build_cell(cfg, shape, mesh)
+    # donate params+opt for train, the cache for decode: memory_analysis then
+    # reflects in-place aliasing, which is what a real deployment runs.
+    donate = {"train": (0, 1), "decode": (1,), "prefill": ()}[shape.kind]
+    with activation_sharding(activation_mapping(mesh)):
+        jitted = jax.jit(fn,
+                         in_shardings=_named(mesh, in_sh),
+                         out_shardings=_named(mesh, out_sh)
+                         if out_sh is not None else None,
+                         donate_argnums=donate)
+        with mesh:
+            lowered = jitted.lower(*args)
+    compiled = None
+    mem = None
+    cost = {}
+    coll = {}
+    if compile_:
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        cost = dict(ca) if ca else {}
+        try:
+            hlo = compiled.as_text()
+        except Exception:
+            hlo = lowered.as_text()
+        coll = collective_bytes_from_hlo(hlo)
+    p_abs = args[0]
+    params_bytes = int(sum(
+        math.prod(x.shape) * x.dtype.itemsize
+        for x in jax.tree_util.tree_leaves(p_abs)))
+    return LoweredCell(arch, shape.name, mesh_name, lowered, compiled, mem,
+                       cost, coll, params_bytes)

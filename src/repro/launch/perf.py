@@ -1,0 +1,95 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Perf-iteration driver (§Perf hillclimbing).
+
+Lowers one (arch × shape) cell with config overrides and reports the
+scan-corrected roofline terms, so each hypothesis→change→measure cycle is
+one command:
+
+  PYTHONPATH=src python -m repro.launch.perf --arch yi-34b \
+      --shape prefill_32k --tag blockkv1024 --set block_kv=1024
+
+Results append to experiments/perf/<arch>__<shape>.jsonl.
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+
+def parse_override(s: str):
+    k, v = s.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            pass
+    if v in ("true", "True"):
+        return k, True
+    if v in ("false", "False"):
+        return k, False
+    return k, v
+
+
+def main() -> int:
+    import jax
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import SHAPES, registry
+    from repro.roofline.analysis import ROOFLINE_HW
+    from repro.roofline.probes import measure_corrected
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (repeatable)")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    assert jax.device_count() == 512
+    cfg = registry.get_config(args.arch)
+    overrides = dict(parse_override(s) for s in args.set)
+    nested = {k: v for k, v in overrides.items() if "." in k}
+    flat = {k: v for k, v in overrides.items() if "." not in k}
+    if flat:
+        cfg = dataclasses.replace(cfg, **flat)
+    for k, v in nested.items():          # e.g. --set ssm.chunk=128
+        outer, inner = k.split(".", 1)
+        sub = getattr(cfg, outer)
+        cfg = dataclasses.replace(cfg,
+                                  **{outer: dataclasses.replace(
+                                      sub, **{inner: v})})
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=False)
+
+    t0 = time.time()
+    rec = measure_corrected(args.arch, cfg, shape, mesh, "pod16x16")
+    c = rec["corrected"]
+    terms = {
+        "compute_s": c["flops"] / ROOFLINE_HW["peak_flops"],
+        "memory_s": c["bytes"] / ROOFLINE_HW["hbm_bw"],
+        "collective_s": c["collective_total"] / ROOFLINE_HW["ici_bw"],
+    }
+    dominant = max(terms, key=terms.get)
+    out = {
+        "tag": args.tag, "arch": args.arch, "shape": args.shape,
+        "overrides": overrides, "corrected": c, **terms,
+        "dominant": dominant, "wall_s": round(time.time() - t0, 1),
+    }
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, f"{args.arch}__{args.shape}.jsonl")
+    with open(path, "a") as f:
+        f.write(json.dumps(out) + "\n")
+    print(json.dumps({k: v for k, v in out.items() if k != "corrected"},
+                     indent=1))
+    print(f"terms: compute={terms['compute_s']:.4f}s "
+          f"memory={terms['memory_s']:.4f}s "
+          f"collective={terms['collective_s']:.4f}s -> {dominant}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

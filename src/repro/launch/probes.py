@@ -1,0 +1,69 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Roofline probe driver: scan-corrected FLOPs/bytes/collectives per cell.
+
+Runs the unrolled probe lowering of repro.roofline.probes for every
+(arch × applicable shape) on the single-pod production mesh and stores
+experiments/probes/*.json for §Roofline.
+
+  PYTHONPATH=src python -m repro.launch.probes [--arch A] [--shape S]
+"""
+import argparse
+import json
+import time
+import traceback
+
+
+def main() -> int:
+    import jax
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import SHAPES, registry, shape_applicable
+    from repro.roofline.probes import run_probes
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default="experiments/probes")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    assert jax.device_count() == 512, jax.device_count()
+    mesh = make_production_mesh(multi_pod=False)
+    mesh_name = "pod16x16"
+    archs = [args.arch] if args.arch else registry.list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for arch in archs:
+        cfg = registry.get_config(arch)
+        for shape_name in shapes:
+            ok, why = shape_applicable(cfg, SHAPES[shape_name])
+            if not ok:
+                continue
+            path = os.path.join(args.out,
+                                f"{mesh_name}__{arch}__{shape_name}.json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"[cached] {arch} {shape_name}")
+                continue
+            t0 = time.time()
+            try:
+                rec = run_probes(arch, shape_name, args.out, mesh, mesh_name)
+                c = rec["corrected"]
+                print(f"[ok] {arch} {shape_name} "
+                      f"corr_flops={c['flops']:.3e}/dev "
+                      f"coll={c['collective_total']:.3e}B/dev "
+                      f"({time.time()-t0:.0f}s)")
+            except Exception as e:                    # noqa: BLE001
+                failures += 1
+                print(f"[FAIL] {arch} {shape_name}: "
+                      f"{type(e).__name__}: {str(e)[:300]}")
+                traceback.print_exc()
+    print(f"probes complete: {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

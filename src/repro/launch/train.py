@@ -1,0 +1,131 @@
+"""Training launcher.
+
+Two sub-commands:
+
+  cost-model — train the paper's learned performance model on a generated
+    corpus (the production path: deterministic sharded sampling, atomic
+    checkpoints, resume, optional int8-compressed DP).
+
+      PYTHONPATH=src python -m repro.launch.train cost-model \
+          --task tile --steps 2000 --ckpt-dir ckpts/tile
+
+  lm — train one of the 10 assigned architectures (reduced config on CPU;
+    full configs are exercised via the dry-run).
+
+      PYTHONPATH=src python -m repro.launch.train lm --arch yi-9b \
+          --steps 10 --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def train_cost_model(args) -> None:
+    from repro.core.features import fit_normalizer
+    from repro.core.model import CostModelConfig
+    from repro.core.simulator import TPUSimulator
+    from repro.data.corpus import filter_by_programs, split_programs
+    from repro.data.fusion_dataset import build_fusion_dataset
+    from repro.data.sampler import BalancedSampler, TileBatchSampler
+    from repro.data.synthetic import generate_corpus
+    from repro.data.tile_dataset import build_tile_dataset
+    from repro.training.optim import AdamWConfig
+    from repro.training.trainer import CostModelTrainer, TrainerConfig
+
+    sim = TPUSimulator()
+    programs = generate_corpus(args.programs, seed=args.seed)
+    split = split_programs([p.program for p in programs],
+                           method=args.split, seed=args.seed)
+    mc = CostModelConfig(gnn=args.gnn, reduction=args.reduction,
+                         hidden_dim=args.hidden, opcode_embed_dim=32,
+                         max_nodes=args.max_nodes)
+    if args.task.startswith("tile"):
+        ds = build_tile_dataset(programs, sim, max_configs_per_kernel=24)
+        recs = filter_by_programs(ds.records, split["train"])
+        from repro.data.tile_dataset import fit_tile_normalizer
+        norm = fit_tile_normalizer(recs)
+        sampler = TileBatchSampler(recs, norm, kernels_per_batch=4,
+                                   configs_per_kernel=8,
+                                   max_nodes=args.max_nodes)
+    else:
+        ds = build_fusion_dataset(programs, sim, configs_per_program=12)
+        recs = filter_by_programs(ds.records, split["train"])
+        norm = fit_normalizer([r.kernel for r in recs])
+        sampler = BalancedSampler(recs, norm, batch_size=32,
+                                  max_nodes=args.max_nodes)
+    tc = TrainerConfig(task=args.task, steps=args.steps,
+                       ckpt_every=args.ckpt_every, log_every=args.log_every,
+                       ckpt_dir=args.ckpt_dir,
+                       metrics_path=args.metrics_path,
+                       compress_grads=args.compress_grads,
+                       optim=AdamWConfig(lr=args.lr))
+    trainer = CostModelTrainer(mc, tc, sampler)
+    res = trainer.run(resume=not args.no_resume)
+    print(f"done: step={res['step']} loss={res['loss']:.5f} "
+          f"wall={res['wall']:.1f}s interrupted={res['interrupted']}")
+
+
+def train_lm(args) -> None:
+    import jax
+    from repro.models import lm, registry
+    from repro.models.config import ShapeSpec
+    from repro.models.inputs import make_batch
+
+    cfg = registry.get_smoke_config(args.arch) if args.smoke \
+        else registry.get_config(args.arch)
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
+    params = lm.init_params(jax.random.key(args.seed), cfg)
+    opt_init, _ = lm.make_optimizer(cfg)
+    opt = opt_init(params)
+    step = jax.jit(lm.train_step_fn(cfg))
+    print(f"arch={cfg.name} params={lm.param_count(params):,}")
+    for i in range(args.steps):
+        batch = make_batch(cfg, shape, seed=args.seed + i)
+        t0 = time.time()
+        params, opt, stats = step(params, opt, batch)
+        print(f"step {i}: loss={float(stats['loss']):.4f} "
+              f"({time.time()-t0:.2f}s)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    cm = sub.add_parser("cost-model")
+    cm.add_argument("--task", default="tile",
+                    choices=["tile", "fusion", "tile_mse", "fusion_mse"])
+    cm.add_argument("--steps", type=int, default=2000)
+    cm.add_argument("--programs", type=int, default=48)
+    cm.add_argument("--split", default="random",
+                    choices=["random", "manual"])
+    cm.add_argument("--gnn", default="graphsage")
+    cm.add_argument("--reduction", default="transformer")
+    cm.add_argument("--hidden", type=int, default=64)
+    cm.add_argument("--max-nodes", type=int, default=48)
+    cm.add_argument("--lr", type=float, default=2e-3)
+    cm.add_argument("--seed", type=int, default=0)
+    cm.add_argument("--ckpt-dir", default="ckpts/cost_model")
+    cm.add_argument("--ckpt-every", type=int, default=500)
+    cm.add_argument("--log-every", type=int, default=100)
+    cm.add_argument("--metrics-path", default="")
+    cm.add_argument("--compress-grads", action="store_true")
+    cm.add_argument("--no-resume", action="store_true")
+
+    lm_p = sub.add_parser("lm")
+    lm_p.add_argument("--arch", required=True)
+    lm_p.add_argument("--smoke", action="store_true")
+    lm_p.add_argument("--steps", type=int, default=5)
+    lm_p.add_argument("--seq", type=int, default=64)
+    lm_p.add_argument("--batch", type=int, default=4)
+    lm_p.add_argument("--seed", type=int, default=0)
+
+    args = ap.parse_args()
+    if args.cmd == "cost-model":
+        train_cost_model(args)
+    else:
+        train_lm(args)
+
+
+if __name__ == "__main__":
+    main()

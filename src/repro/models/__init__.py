@@ -1,0 +1,10 @@
+"""Model zoo: the 10 assigned architectures as selectable configs."""
+from repro.models.config import ModelConfig, SHAPES, ShapeSpec, Stack, \
+    shape_applicable
+from repro.models.registry import ARCHS, get_config, get_smoke_config, \
+    list_archs
+
+__all__ = [
+    "ModelConfig", "SHAPES", "ShapeSpec", "Stack", "shape_applicable",
+    "ARCHS", "get_config", "get_smoke_config", "list_archs",
+]

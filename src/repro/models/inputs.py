@@ -1,0 +1,69 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation (dry-run pattern).
+
+`make_batch()` materializes a concrete random batch of the same structure
+for smoke tests and the end-to-end examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig, ShapeSpec
+
+
+def _emb_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Batch pytree of ShapeDtypeStructs for train/prefill steps."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.embed_inputs:                          # musicgen frame embeddings
+        return {
+            "embeddings": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                               _emb_dtype(cfg)),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    if cfg.num_patch_tokens:                      # llava patch prefix
+        S_text = S - cfg.num_patch_tokens
+        assert S_text > 1, (S, cfg.num_patch_tokens)
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S_text), jnp.int32),
+            "patch_embeds": jax.ShapeDtypeStruct(
+                (B, cfg.num_patch_tokens, cfg.d_model), _emb_dtype(cfg)),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Decode step: one new token against a seq_len cache."""
+    B = shape.global_batch
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    if shape.kind in ("train", "prefill"):
+        return train_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeSpec, seed: int = 0) -> dict:
+    """Concrete random batch matching input_specs (smoke tests/examples)."""
+    rng = np.random.default_rng(seed)
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, s in specs.items():
+        if k in ("tokens", "labels"):
+            out[k] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, size=s.shape), jnp.int32)
+        elif k == "pos":
+            out[k] = jnp.asarray(shape.seq_len - 1, jnp.int32)
+        else:
+            out[k] = jnp.asarray(
+                rng.normal(0, 1, size=s.shape), jnp.float32).astype(s.dtype)
+    return out

@@ -1,0 +1,456 @@
+"""Generic LM assembled from config stacks — covers all 10 architectures.
+
+Layer stacks are scanned (`jax.lax.scan` over stacked per-layer params) with
+optional remat, so the 671B-layer-count HLO stays compact for the dry-run.
+Training uses microbatched gradient accumulation (global_batch =
+microbatch × n_micro) — full-batch 256×4096 logits would never fit.
+
+Entry points:
+  init_params / init_abstract           — real or ShapeDtypeStruct params
+  train_step_fn(cfg)                    — (params, opt, batch) -> ...
+  prefill_step_fn(cfg, capacity)        — (params, batch) -> (logits, cache)
+  decode_step_fn(cfg)                   — (params, cache, tokens, pos) -> ...
+  init_cache / cache_abstract           — decode caches per layer stack
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig, Stack
+from repro.sharding.context import constrain, constrain_batch_tree
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update
+from repro.training.adafactor import adafactor_init, adafactor_update
+
+
+def _parse(elem: str) -> tuple[str, str]:
+    if "+" in elem:
+        m, f = elem.split("+", 1)
+    else:
+        m, f = elem, "none"
+    return m, f
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ----------------------------------------------------------------------------
+# Block init / apply
+# ----------------------------------------------------------------------------
+def block_init(rng, cfg: ModelConfig, elem: str) -> dict:
+    mixer, ffn = _parse(elem)
+    k1, k2 = jax.random.split(rng)
+    p: dict[str, Any] = {"norm1": L._norm_init(cfg.d_model)}
+    if mixer in ("attn", "swa"):
+        p["mixer"] = L.attn_init(k1, cfg)
+    elif mixer == "mla":
+        p["mixer"] = L.mla_init(k1, cfg)
+    elif mixer == "ssd":
+        p["mixer"] = L.ssd_init(k1, cfg)
+    elif mixer == "rglru":
+        p["mixer"] = L.rglru_init(k1, cfg)
+    else:
+        raise ValueError(f"unknown mixer {mixer!r}")
+    if ffn != "none":
+        p["norm2"] = L._norm_init(cfg.d_model)
+        p["ffn"] = L.mlp_init(k2, cfg) if ffn == "mlp" else L.moe_init(k2, cfg)
+    return p
+
+
+def _mixer_window(cfg: ModelConfig, mixer: str) -> int | None:
+    return cfg.sliding_window if mixer == "swa" else None
+
+
+def block_apply_train(params: dict, cfg: ModelConfig, elem: str,
+                      x: jnp.ndarray) -> jnp.ndarray:
+    mixer, ffn = _parse(elem)
+    h = L.rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if mixer in ("attn", "swa"):
+        h = L.attn_apply_train(params["mixer"], cfg, h,
+                               window=_mixer_window(cfg, mixer))
+    elif mixer == "mla":
+        h = L.mla_apply_train(params["mixer"], cfg, h)
+    elif mixer == "ssd":
+        h = L.ssd_apply_train(params["mixer"], cfg, h)
+    elif mixer == "rglru":
+        h = L.rglru_apply_train(params["mixer"], cfg, h)
+    x = x + h
+    if ffn != "none":
+        h = L.rmsnorm(params["norm2"], x, cfg.norm_eps)
+        h = L.mlp_apply(params["ffn"], h) if ffn == "mlp" \
+            else L.moe_apply(params["ffn"], cfg, h)
+        x = x + h
+    return constrain(x, "act_btd")
+
+
+def block_cache_init(cfg: ModelConfig, elem: str, batch: int,
+                     capacity: int) -> dict:
+    mixer, _ = _parse(elem)
+    if mixer in ("attn", "swa"):
+        return L.attn_cache_init(cfg, batch, capacity,
+                                 window=_mixer_window(cfg, mixer))
+    if mixer == "mla":
+        return L.mla_cache_init(cfg, batch, capacity)
+    if mixer == "ssd":
+        return L.ssd_cache_init(cfg, batch)
+    if mixer == "rglru":
+        return L.rglru_cache_init(cfg, batch)
+    raise ValueError(mixer)
+
+
+def block_apply_decode(params: dict, cfg: ModelConfig, elem: str,
+                       x: jnp.ndarray, cache: dict, pos) -> tuple:
+    mixer, ffn = _parse(elem)
+    h = L.rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if mixer in ("attn", "swa"):
+        h, new_cache = L.attn_apply_decode(params["mixer"], cfg, h, cache,
+                                           pos,
+                                           window=_mixer_window(cfg, mixer))
+    elif mixer == "mla":
+        h, new_cache = L.mla_apply_decode(params["mixer"], cfg, h, cache, pos)
+    elif mixer == "ssd":
+        h, new_cache = L.ssd_apply_decode(params["mixer"], cfg, h, cache, pos)
+    elif mixer == "rglru":
+        h, new_cache = L.rglru_apply_decode(params["mixer"], cfg, h, cache,
+                                            pos)
+    x = x + h
+    if ffn != "none":
+        h = L.rmsnorm(params["norm2"], x, cfg.norm_eps)
+        h = L.mlp_apply(params["ffn"], h) if ffn == "mlp" \
+            else L.moe_apply(params["ffn"], cfg, h)
+        x = x + h
+    return x, new_cache
+
+
+def block_apply_prefill(params: dict, cfg: ModelConfig, elem: str,
+                        x: jnp.ndarray, capacity: int) -> tuple:
+    """Like train, but also returns the decode cache for this layer."""
+    mixer, ffn = _parse(elem)
+    h = L.rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if mixer in ("attn", "swa"):
+        window = _mixer_window(cfg, mixer)
+        S = h.shape[1]
+        positions = jnp.arange(S)
+        q, k, v = L.attn_qkv(params["mixer"], cfg, h, positions)
+        out = L.chunked_attention(q, k, v, causal=True, window=window,
+                                  block_kv=cfg.block_kv)
+        h = jnp.einsum("bshk,hkd->bsd", out, params["mixer"]["wo"])
+        cache = L.attn_make_cache_from_prefill(cfg, k, v, window=window,
+                                               capacity=capacity)
+    elif mixer == "mla":
+        S = h.shape[1]
+        positions = jnp.arange(S)
+        ckv, krope = L._mla_kv_latent(params["mixer"], cfg, h, positions)
+        hh = L.mla_apply_train(params["mixer"], cfg, h)
+        B = h.shape[0]
+        pad = capacity - S
+        cache = {
+            "ckv": jnp.pad(ckv, ((0, 0), (0, pad), (0, 0))),
+            "krope": jnp.pad(krope, ((0, 0), (0, pad), (0, 0))),
+            "k_pos": jnp.pad(
+                jnp.broadcast_to(positions, (B, S)).astype(jnp.int32),
+                ((0, 0), (0, pad)), constant_values=-1),
+        }
+        h = hh
+    elif mixer == "ssd":
+        h, cache = L.ssd_apply_train(params["mixer"], cfg, h,
+                                     return_state=True)
+    elif mixer == "rglru":
+        out, conv, h_last = L.rglru_core(params["mixer"], cfg, h)
+        cache = {"state": h_last.astype(jnp.float32), "conv": conv}
+        h = out
+    x = x + h
+    if ffn != "none":
+        h = L.rmsnorm(params["norm2"], x, cfg.norm_eps)
+        h = L.mlp_apply(params["ffn"], h) if ffn == "mlp" \
+            else L.moe_apply(params["ffn"], cfg, h)
+        x = x + h
+    return x, cache
+
+
+# ----------------------------------------------------------------------------
+# Whole-model params
+# ----------------------------------------------------------------------------
+def init_params(rng, cfg: ModelConfig) -> dict:
+    dt = _dt(cfg)
+    k_embed, k_head, k_stacks = jax.random.split(rng, 3)
+    params: dict[str, Any] = {
+        "embed": L._winit(k_embed, (cfg.vocab_size, cfg.d_model), dt),
+        "final_norm": L._norm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L._winit(k_head, (cfg.d_model, cfg.vocab_size),
+                                     dt)
+    stacks = []
+    for si, stack in enumerate(cfg.stacks):
+        ks = jax.random.fold_in(k_stacks, si)
+        elem_params = []
+        for ei, elem in enumerate(stack.pattern):
+            keys = jax.random.split(jax.random.fold_in(ks, ei),
+                                    stack.repeats)
+            stacked = jax.vmap(lambda k: block_init(k, cfg, elem))(keys)
+            elem_params.append(stacked)
+        stacks.append(tuple(elem_params))
+    params["stacks"] = stacks
+    return params
+
+
+def init_abstract(cfg: ModelConfig) -> dict:
+    """ShapeDtypeStruct params (no allocation) — dry-run input."""
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+
+
+# ----------------------------------------------------------------------------
+# Forward (training / prefill trunk)
+# ----------------------------------------------------------------------------
+def _embed_inputs(params, cfg: ModelConfig, batch: dict) -> jnp.ndarray:
+    if cfg.embed_inputs:                         # musicgen: frame embeddings
+        return batch["embeddings"].astype(_dt(cfg))
+    tok = jnp.take(params["embed"], batch["tokens"], axis=0)
+    tok = tok * jnp.asarray(math.sqrt(cfg.d_model), tok.dtype)
+    if cfg.num_patch_tokens:                     # llava: patch prefix
+        patches = batch["patch_embeds"].astype(tok.dtype)
+        tok = jnp.concatenate([patches, tok], axis=1)
+    return constrain(tok, "act_btd")
+
+
+def _remat_wrap(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)                    # "full"
+
+
+def _layer_slice(elem_params, i: int):
+    return jax.tree_util.tree_map(lambda a: a[i], tuple(elem_params))
+
+
+def forward_trunk(params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """x: [B,S,D] embeddings -> final hidden states."""
+    for stack, elem_params in zip(cfg.stacks, params["stacks"]):
+        pattern = stack.pattern
+
+        def body(h, layer_params):
+            for elem, p in zip(pattern, layer_params):
+                h = block_apply_train(p, cfg, elem, h)
+            return h, None
+
+        body = _remat_wrap(cfg, body)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, tuple(elem_params))
+        else:                      # roofline probe: unrolled
+            for i in range(stack.repeats):
+                x, _ = body(x, _layer_slice(elem_params, i))
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def logits_fn(params, cfg: ModelConfig, h: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", h, params["embed"])
+    return h @ params["lm_head"]
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict) -> jnp.ndarray:
+    x = _embed_inputs(params, cfg, batch)
+    h = forward_trunk(params, cfg, x)
+    logits = logits_fn(params, cfg, h).astype(jnp.float32)
+    if cfg.embed_inputs:
+        labels = batch["labels"]
+        lg = logits
+    else:
+        tokens = batch["tokens"]
+        off = cfg.num_patch_tokens
+        lg = logits[:, off:-1] if off else logits[:, :-1]
+        labels = tokens[:, 1:]
+    logp = jax.nn.log_softmax(lg, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32),
+                             axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ----------------------------------------------------------------------------
+# Train step (microbatched gradient accumulation)
+# ----------------------------------------------------------------------------
+def make_optimizer(cfg: ModelConfig, optim_cfg: AdamWConfig | None = None):
+    optim_cfg = optim_cfg or AdamWConfig(lr=3e-4, weight_decay=0.1,
+                                         schedule="cosine")
+    if cfg.optimizer == "adafactor":
+        return (adafactor_init,
+                lambda p, g, s: adafactor_update(p, g, s, lr=optim_cfg.lr))
+    return (adamw_init,
+            lambda p, g, s: adamw_update(p, g, s, optim_cfg))
+
+
+def train_step_fn(cfg: ModelConfig, optim_cfg: AdamWConfig | None = None):
+    _, update = make_optimizer(cfg, optim_cfg)
+
+    def train_step(params, opt_state, batch):
+        gb = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        mb = min(cfg.microbatch, gb)
+        n_micro = gb // mb
+
+        def reshape(x):
+            return x.reshape((n_micro, mb) + x.shape[1:])
+        micro = constrain_batch_tree(jax.tree_util.tree_map(reshape, batch),
+                                     leading=1)
+        acc_dtype = jnp.bfloat16 if cfg.grad_accum_dtype == "bfloat16" \
+            else jnp.float32
+
+        if cfg.grad_accum == "grad_of_scan":
+            # differentiate the whole accumulation loop: one gradient
+            # reduction per step instead of one per microbatch
+            micro_loss = jax.checkpoint(
+                lambda p, mb_: loss_fn(p, cfg, mb_))
+
+            def total_loss(p):
+                def body(acc, mbatch):
+                    return acc + micro_loss(p, mbatch), None
+                if cfg.scan_microbatch:
+                    s, _ = jax.lax.scan(body,
+                                        jnp.zeros((), jnp.float32), micro)
+                else:
+                    s = jnp.zeros((), jnp.float32)
+                    for i in range(n_micro):
+                        s, _ = body(s, jax.tree_util.tree_map(
+                            lambda a: a[i], micro))
+                return s / n_micro
+
+            loss_mean, grads = jax.value_and_grad(total_loss)(params)
+            loss_sum = loss_mean * n_micro
+        else:
+            def acc_body(carry, mbatch):
+                loss_sum, grads = carry
+                l, g = jax.value_and_grad(loss_fn)(params, cfg, mbatch)
+                grads = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(acc_dtype), grads, g)
+                return (loss_sum + l, grads), None
+
+            zero_grads = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params)
+            carry0 = (jnp.zeros((), jnp.float32), zero_grads)
+            if cfg.scan_microbatch:
+                (loss_sum, grads), _ = jax.lax.scan(acc_body, carry0, micro)
+            else:                      # roofline probe: unrolled
+                carry = carry0
+                for i in range(n_micro):
+                    carry, _ = acc_body(
+                        carry, jax.tree_util.tree_map(lambda a: a[i], micro))
+                loss_sum, grads = carry
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+        new_params, new_opt, stats = update(params, grads, opt_state)
+        stats["loss"] = loss_sum / n_micro
+        return new_params, new_opt, stats
+
+    return train_step
+
+
+# ----------------------------------------------------------------------------
+# Serving: prefill + decode
+# ----------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> list:
+    caches = []
+    for stack in cfg.stacks:
+        elem_caches = []
+        for elem in stack.pattern:
+            one = block_cache_init(cfg, elem, batch, capacity)
+            stacked = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None],
+                                           (stack.repeats,) + x.shape).copy(),
+                one)
+            elem_caches.append(stacked)
+        caches.append(tuple(elem_caches))
+    return caches
+
+
+def cache_abstract(cfg: ModelConfig, batch: int, capacity: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, capacity))
+
+
+def prefill_step_fn(cfg: ModelConfig, capacity: int):
+    def prefill(params, batch):
+        x = _embed_inputs(params, cfg, batch)
+        caches = []
+        for stack, elem_params in zip(cfg.stacks, params["stacks"]):
+            pattern = stack.pattern
+
+            def body(h, layer_params):
+                new_caches = []
+                for elem, p in zip(pattern, layer_params):
+                    h, c = block_apply_prefill(p, cfg, elem, h, capacity)
+                    new_caches.append(c)
+                return h, tuple(new_caches)
+
+            body = _remat_wrap(cfg, body)
+            if cfg.scan_layers:
+                x, stack_caches = jax.lax.scan(body, x, tuple(elem_params))
+            else:                  # roofline probe: unrolled
+                per_layer = []
+                for i in range(stack.repeats):
+                    x, c = body(x, _layer_slice(elem_params, i))
+                    per_layer.append(c)
+                stack_caches = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *per_layer)
+            caches.append(stack_caches)
+        h = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = logits_fn(params, cfg, h[:, -1:, :])
+        return logits, caches
+
+    return prefill
+
+
+def decode_step_fn(cfg: ModelConfig):
+    def decode(params, caches, tokens, pos):
+        """tokens: [B,1] int32; pos: scalar int32. Returns (logits, caches)."""
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        new_caches = []
+        for stack, elem_params, stack_cache in zip(cfg.stacks,
+                                                   params["stacks"], caches):
+            pattern = stack.pattern
+
+            def body(h, inp):
+                layer_params, layer_cache = inp
+                new_lc = []
+                for elem, p, c in zip(pattern, layer_params, layer_cache):
+                    h, nc = block_apply_decode(p, cfg, elem, h, c, pos)
+                    new_lc.append(nc)
+                return h, tuple(new_lc)
+
+            if cfg.scan_layers:
+                x, new_stack_cache = jax.lax.scan(
+                    body, x, (tuple(elem_params), stack_cache))
+            else:                  # roofline probe: unrolled
+                per_layer = []
+                for i in range(stack.repeats):
+                    x, c = body(x, (_layer_slice(elem_params, i),
+                                    jax.tree_util.tree_map(
+                                        lambda a: a[i], stack_cache)))
+                    per_layer.append(c)
+                new_stack_cache = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *per_layer)
+            new_caches.append(new_stack_cache)
+        h = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = logits_fn(params, cfg, h)
+        return logits, new_caches
+
+    return decode
+
+
+def param_count(params) -> int:
+    return int(sum(x.size for x in jax.tree_util.tree_leaves(params)))
+
+
+def analytic_param_count(cfg: ModelConfig) -> int:
+    """Parameter count from abstract shapes (sanity vs init; roofline)."""
+    abstract = init_abstract(cfg)
+    return int(sum(math.prod(x.shape)
+                   for x in jax.tree_util.tree_leaves(abstract)))

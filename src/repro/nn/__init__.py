@@ -1,0 +1,60 @@
+"""Minimal neural-network library used by both the learned cost model and
+the LM model zoo.
+
+No flax/haiku in this environment, so modules are (init, apply) function
+pairs over plain pytrees of jnp arrays. Parameter trees are nested dicts;
+every leaf is a jnp.ndarray. All apply functions are pure.
+"""
+from repro.nn.core import (
+    Initializer,
+    dense_init,
+    dense_apply,
+    embedding_init,
+    embedding_apply,
+    layernorm_init,
+    layernorm_apply,
+    rmsnorm_init,
+    rmsnorm_apply,
+    mlp_init,
+    mlp_apply,
+    dropout,
+    glorot,
+    normal_init,
+    zeros_init,
+    ones_init,
+    l2_normalize,
+)
+from repro.nn.lstm import lstm_init, lstm_apply, lstm_cell
+from repro.nn.transformer import (
+    encoder_init,
+    encoder_apply,
+    mha_init,
+    mha_apply,
+)
+
+__all__ = [
+    "Initializer",
+    "dense_init",
+    "dense_apply",
+    "embedding_init",
+    "embedding_apply",
+    "layernorm_init",
+    "layernorm_apply",
+    "rmsnorm_init",
+    "rmsnorm_apply",
+    "mlp_init",
+    "mlp_apply",
+    "dropout",
+    "glorot",
+    "normal_init",
+    "zeros_init",
+    "ones_init",
+    "l2_normalize",
+    "lstm_init",
+    "lstm_apply",
+    "lstm_cell",
+    "encoder_init",
+    "encoder_apply",
+    "mha_init",
+    "mha_apply",
+]

@@ -1,0 +1,138 @@
+"""Core building blocks: dense, embedding, norms, MLP, dropout, inits."""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Initializer = Callable[[jax.Array, tuple], jnp.ndarray]
+
+
+# ----------------------------------------------------------------------------
+# Initializers
+# ----------------------------------------------------------------------------
+def glorot(rng: jax.Array, shape: tuple, dtype=jnp.float32) -> jnp.ndarray:
+    """Glorot/Xavier uniform over the last two dims (or fan of whole shape)."""
+    if len(shape) >= 2:
+        fan_in, fan_out = shape[-2], shape[-1]
+    else:
+        fan_in = fan_out = shape[-1]
+    limit = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(rng, shape, dtype, -limit, limit)
+
+
+def normal_init(stddev: float = 0.02):
+    def init(rng, shape, dtype=jnp.float32):
+        return jax.random.normal(rng, shape, dtype) * stddev
+
+    return init
+
+
+def zeros_init(rng, shape, dtype=jnp.float32):
+    del rng
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(rng, shape, dtype=jnp.float32):
+    del rng
+    return jnp.ones(shape, dtype)
+
+
+def l2_normalize(x: jnp.ndarray, axis: int = -1, eps: float = 1e-6) -> jnp.ndarray:
+    return x * jax.lax.rsqrt(jnp.sum(x * x, axis=axis, keepdims=True) + eps)
+
+
+# ----------------------------------------------------------------------------
+# Dense
+# ----------------------------------------------------------------------------
+def dense_init(rng, in_dim: int, out_dim: int, *, bias: bool = True,
+               w_init: Initializer = glorot, dtype=jnp.float32) -> dict:
+    kw, kb = jax.random.split(rng)
+    params = {"w": w_init(kw, (in_dim, out_dim), dtype)}
+    if bias:
+        params["b"] = jnp.zeros((out_dim,), dtype)
+    del kb
+    return params
+
+
+def dense_apply(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+# ----------------------------------------------------------------------------
+# Embedding
+# ----------------------------------------------------------------------------
+def embedding_init(rng, vocab: int, dim: int, *, stddev: float = 0.02,
+                   dtype=jnp.float32) -> dict:
+    return {"table": jax.random.normal(rng, (vocab, dim), dtype) * stddev}
+
+
+def embedding_apply(params: dict, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["table"], ids, axis=0)
+
+
+# ----------------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------------
+def layernorm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm_apply(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y * params["scale"] + params["bias"]
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm_apply(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    # Compute statistics in f32 for stability regardless of activation dtype.
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = (xf * jax.lax.rsqrt(ms + eps)).astype(x.dtype)
+    return y * params["scale"].astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# MLP stack (used heavily by the cost model: f1, f2^k, f3^k, heads)
+# ----------------------------------------------------------------------------
+def mlp_init(rng, dims: Sequence[int], *, bias: bool = False,
+             w_init: Initializer = glorot, dtype=jnp.float32) -> dict:
+    """A stack of Dense layers: dims = [in, h1, ..., out]."""
+    layers = []
+    keys = jax.random.split(rng, max(len(dims) - 1, 1))
+    for i in range(len(dims) - 1):
+        layers.append(
+            dense_init(keys[i], dims[i], dims[i + 1], bias=bias,
+                       w_init=w_init, dtype=dtype))
+    return {"layers": layers}
+
+
+def mlp_apply(params: dict, x: jnp.ndarray, *,
+              act: Callable = jax.nn.relu, final_act: bool = False) -> jnp.ndarray:
+    n = len(params["layers"])
+    for i, layer in enumerate(params["layers"]):
+        x = dense_apply(layer, x)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ----------------------------------------------------------------------------
+# Dropout (explicit rng, identity when deterministic)
+# ----------------------------------------------------------------------------
+def dropout(rng: jax.Array | None, x: jnp.ndarray, rate: float,
+            deterministic: bool) -> jnp.ndarray:
+    if deterministic or rate <= 0.0 or rng is None:
+        return x
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(rng, keep, x.shape)
+    return jnp.where(mask, x / keep, 0.0)

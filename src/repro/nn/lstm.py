@@ -1,0 +1,66 @@
+"""LSTM used for the paper's sequence reduction (topo-sorted node embeddings).
+
+Standard LSTM cell, scanned with jax.lax.scan; supports a validity mask so
+padded nodes do not update the state (crucial for padded kernel graphs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.core import glorot
+
+
+def lstm_init(rng, in_dim: int, hidden: int, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "wx": glorot(k1, (in_dim, 4 * hidden), dtype),
+        "wh": glorot(k2, (hidden, 4 * hidden), dtype),
+        "b": jnp.zeros((4 * hidden,), dtype),
+    }
+
+
+def lstm_cell(params: dict, carry, x: jnp.ndarray):
+    """One step. carry = (h, c); x: [B, in_dim]."""
+    h, c = carry
+    gates = x @ params["wx"] + h @ params["wh"] + params["b"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    i = jax.nn.sigmoid(i)
+    f = jax.nn.sigmoid(f + 1.0)  # forget-gate bias init trick
+    g = jnp.tanh(g)
+    o = jax.nn.sigmoid(o)
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return (h_new, c_new)
+
+
+def lstm_apply(params: dict, xs: jnp.ndarray,
+               mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Run over sequence axis 1. xs: [B, T, in_dim]; mask: [B, T] (1=valid).
+
+    Returns the final hidden state [B, hidden], where masked (padded) steps
+    leave the state unchanged, so the "final" state is the state after the
+    last *valid* element even with right-padding.
+    """
+    B, T, _ = xs.shape
+    hidden = params["wh"].shape[0]
+    h0 = jnp.zeros((B, hidden), xs.dtype)
+    c0 = jnp.zeros((B, hidden), xs.dtype)
+
+    def step(carry, inp):
+        x_t, m_t = inp
+        h, c = carry
+        h_new, c_new = lstm_cell(params, (h, c), x_t)
+        if m_t is not None:
+            m = m_t[:, None]
+            h_new = m * h_new + (1 - m) * h
+            c_new = m * c_new + (1 - m) * c
+        return (h_new, c_new), None
+
+    xs_t = jnp.swapaxes(xs, 0, 1)  # [T, B, D]
+    if mask is not None:
+        mask_t = jnp.swapaxes(mask.astype(xs.dtype), 0, 1)  # [T, B]
+    else:
+        mask_t = jnp.ones((T, B), xs.dtype)
+    (h, _), _ = jax.lax.scan(step, (h0, c0), (xs_t, mask_t))
+    return h

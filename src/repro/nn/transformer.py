@@ -1,0 +1,81 @@
+"""Transformer encoder used as a kernel-embedding reduction (paper §3.2).
+
+Pre-norm encoder blocks with masked multi-head self-attention over node
+embeddings. This is the *cost-model* transformer; the LM zoo has its own
+decoder implementation under repro.models (different enough — rotary, GQA,
+KV caches — that sharing would hurt clarity).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.core import (
+    dense_apply,
+    dense_init,
+    dropout,
+    layernorm_apply,
+    layernorm_init,
+)
+
+
+def mha_init(rng, dim: int, num_heads: int, dtype=jnp.float32) -> dict:
+    assert dim % num_heads == 0, (dim, num_heads)
+    kq, kk, kv, ko = jax.random.split(rng, 4)
+    return {
+        "q": dense_init(kq, dim, dim, bias=False, dtype=dtype),
+        "k": dense_init(kk, dim, dim, bias=False, dtype=dtype),
+        "v": dense_init(kv, dim, dim, bias=False, dtype=dtype),
+        "o": dense_init(ko, dim, dim, bias=False, dtype=dtype),
+    }
+
+
+def mha_apply(params: dict, x: jnp.ndarray, mask: jnp.ndarray | None,
+              num_heads: int) -> jnp.ndarray:
+    """x: [B, N, D]; mask: [B, N] validity (1=real node)."""
+    B, N, D = x.shape
+    H = num_heads
+    hd = D // H
+    q = dense_apply(params["q"], x).reshape(B, N, H, hd)
+    k = dense_apply(params["k"], x).reshape(B, N, H, hd)
+    v = dense_apply(params["v"], x).reshape(B, N, H, hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(hd))
+    if mask is not None:
+        neg = jnp.finfo(logits.dtype).min
+        logits = jnp.where(mask[:, None, None, :] > 0, logits, neg)
+    attn = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", attn, v).reshape(B, N, D)
+    return dense_apply(params["o"], out)
+
+
+def encoder_init(rng, dim: int, num_heads: int, num_layers: int,
+                 mlp_factor: int = 4, dtype=jnp.float32) -> dict:
+    blocks = []
+    keys = jax.random.split(rng, max(num_layers, 1))
+    for i in range(num_layers):
+        ka, k1, k2 = jax.random.split(keys[i], 3)
+        blocks.append({
+            "ln1": layernorm_init(dim, dtype),
+            "attn": mha_init(ka, dim, num_heads, dtype),
+            "ln2": layernorm_init(dim, dtype),
+            "fc1": dense_init(k1, dim, mlp_factor * dim, bias=True, dtype=dtype),
+            "fc2": dense_init(k2, mlp_factor * dim, dim, bias=True, dtype=dtype),
+        })
+    return {"blocks": blocks, "ln_f": layernorm_init(dim, dtype)}
+
+
+def encoder_apply(params: dict, x: jnp.ndarray, mask: jnp.ndarray | None,
+                  num_heads: int, *, rng=None, dropout_rate: float = 0.0,
+                  deterministic: bool = True) -> jnp.ndarray:
+    """Returns per-node encodings [B, N, D] (reduction handled by caller)."""
+    for i, blk in enumerate(params["blocks"]):
+        sub = None if rng is None else jax.random.fold_in(rng, i)
+        h = mha_apply(blk["attn"], layernorm_apply(blk["ln1"], x), mask,
+                      num_heads)
+        h = dropout(sub, h, dropout_rate, deterministic)
+        x = x + h
+        h = dense_apply(blk["fc1"], layernorm_apply(blk["ln2"], x))
+        h = jax.nn.gelu(h)
+        h = dense_apply(blk["fc2"], h)
+        x = x + h
+    return layernorm_apply(params["ln_f"], x)

@@ -1,0 +1,11 @@
+from repro.roofline.analysis import (
+    ROOFLINE_HW,
+    active_param_count,
+    build_table,
+    model_flops,
+    render_markdown,
+    roofline_terms,
+)
+
+__all__ = ["ROOFLINE_HW", "active_param_count", "build_table", "model_flops",
+           "render_markdown", "roofline_terms"]

@@ -1,0 +1,129 @@
+"""Scan-corrected cost measurement via probe lowering.
+
+Problem: `compiled.cost_analysis()` counts while-loop bodies ONCE (verified
+empirically — see EXPERIMENTS.md §Roofline), so a 61-layer scan × 16-micro-
+batch scan under-reports FLOPs/bytes/collectives by ~3 orders of magnitude.
+
+Fix: lower small UNROLLED probe variants of each cell on the same mesh and
+solve for the per-layer and per-microbatch costs algebraically:
+
+  train:    F(m, L_1..L_S) = O + m·(H + Σ_s L_s·C_s)
+    P1  = F(1, all L_s=1)          = O + H + ΣC_s
+    P3  = F(2, all L_s=1)          = O + 2(H + ΣC_s)      → O = 2·P1 − P3
+    P2_s = F(1, L_s=2, others 1)   = P1 + C_s             → C_s
+    corrected = O + m·(P1 − O + Σ_s (L_s−1)·C_s)
+
+  prefill/decode: F(L) = O' + Σ L_s·C_s,  O' absorbed into P1:
+    corrected = P1 + Σ_s (L_s−1)·C_s
+
+Each probe is a real lower+compile on the production mesh, so the costs
+include GSPMD collectives — the correction applies to flops, bytes AND
+collective bytes uniformly. Probes use the single-pod mesh (the roofline
+table is single-pod per the assignment).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from repro.models.config import ModelConfig, ShapeSpec, Stack
+
+METRICS = ("flops", "bytes", "transcendentals", "all-gather", "all-reduce",
+           "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def _cell_metrics(cell) -> dict:
+    cost = cell.cost_analysis
+    coll = cell.collective_bytes
+    m = {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "transcendentals": float(cost.get("transcendentals", 0.0)),
+    }
+    for k in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+              "collective-permute"):
+        m[k] = float(coll.get(k, 0.0))
+    return m
+
+
+def _probe_cfg(cfg: ModelConfig, stack_repeats: list[int]) -> ModelConfig:
+    stacks = tuple(Stack(s.pattern, r)
+                   for s, r in zip(cfg.stacks, stack_repeats))
+    return dataclasses.replace(cfg, stacks=stacks, scan_layers=False,
+                               scan_microbatch=False)
+
+
+def _probe_shape(shape: ShapeSpec, cfg: ModelConfig, m: int) -> ShapeSpec:
+    if shape.kind != "train":
+        return shape
+    return ShapeSpec(shape.name, shape.seq_len, cfg.microbatch * m,
+                     shape.kind)
+
+
+def measure_corrected(arch: str, cfg: ModelConfig, shape: ShapeSpec, mesh,
+                      mesh_name: str, *, log=print) -> dict:
+    """Returns {'corrected': {metric: per-device value}, 'probes': {...},
+    'raw_full': {...}, plus the full cell's memory analysis & params}."""
+    from repro.launch.lowering import lower_cell
+
+    S = len(cfg.stacks)
+    ones = [1] * S
+
+    probes = {}
+    # P1: one layer per stack, one microbatch
+    log(f"  probe P1 {arch}/{shape.name}")
+    p1_cell = lower_cell(arch, _probe_cfg(cfg, ones),
+                         _probe_shape(shape, cfg, 1), mesh, mesh_name)
+    probes["P1"] = _cell_metrics(p1_cell)
+
+    # P2_s: stack s doubled
+    c_s = []
+    for s in range(S):
+        reps = list(ones)
+        reps[s] = 2
+        log(f"  probe P2_{s} {arch}/{shape.name}")
+        cell = lower_cell(arch, _probe_cfg(cfg, reps),
+                          _probe_shape(shape, cfg, 1), mesh, mesh_name)
+        probes[f"P2_{s}"] = _cell_metrics(cell)
+        c_s.append({k: probes[f"P2_{s}"][k] - probes["P1"][k]
+                    for k in METRICS})
+
+    if shape.kind == "train":
+        log(f"  probe P3 {arch}/{shape.name}")
+        p3_cell = lower_cell(arch, _probe_cfg(cfg, ones),
+                             _probe_shape(shape, cfg, 2), mesh, mesh_name)
+        probes["P3"] = _cell_metrics(p3_cell)
+        m_total = max(shape.global_batch // cfg.microbatch, 1)
+        corrected = {}
+        for k in METRICS:
+            O = max(2 * probes["P1"][k] - probes["P3"][k], 0.0)
+            per_micro = probes["P1"][k] - O
+            extra_layers = sum((st.repeats - 1) * c[k]
+                               for st, c in zip(cfg.stacks, c_s))
+            corrected[k] = O + m_total * (per_micro + extra_layers)
+    else:
+        corrected = {}
+        for k in METRICS:
+            extra_layers = sum((st.repeats - 1) * c[k]
+                               for st, c in zip(cfg.stacks, c_s))
+            corrected[k] = probes["P1"][k] + extra_layers
+
+    corrected["collective_total"] = sum(
+        corrected[k] for k in ("all-gather", "all-reduce", "reduce-scatter",
+                               "all-to-all", "collective-permute"))
+    return {"corrected": corrected, "probes": probes,
+            "per_stack_layer": c_s}
+
+
+def run_probes(arch: str, shape_name: str, out_dir: str, mesh,
+               mesh_name: str) -> dict:
+    from repro.models import SHAPES, registry
+    cfg = registry.get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = measure_corrected(arch, cfg, shape, mesh, mesh_name)
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{mesh_name}__{arch}__{shape_name}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec

@@ -1,0 +1,10 @@
+from repro.sharding.partition import (
+    batch_specs,
+    cache_specs,
+    opt_specs,
+    param_specs,
+)
+from repro.sharding.context import activation_sharding, constrain, dp_axes
+
+__all__ = ["batch_specs", "cache_specs", "opt_specs", "param_specs",
+           "activation_sharding", "constrain", "dp_axes"]

@@ -1,0 +1,234 @@
+"""Parameter / optimizer / batch / cache partition rules.
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+  * dp   = ("pod","data") or "data" — batch & FSDP axis
+  * tp   = "model"                  — heads / d_ff / vocab / experts axis
+
+Rules are *candidate lists*: the first spec whose sharded dims evenly divide
+the leaf's shape wins (jit argument shardings must divide exactly — there is
+no GSPMD padding for explicit input shardings). This is how e.g.:
+  * yi-34b's 56 q-heads fall back to head-dim (128) sharding on 16-way TP,
+  * recurrentgemma's MQA kv=1 falls back to replicated KV,
+  * granite's 40 experts fall back from EP to TP over the expert FFN dim,
+  * mamba2's vocab 50280 falls back to embedding-column sharding.
+Each fallback is a real, coherent TP variant (extra collectives appear in
+the dry-run HLO and are priced by §Roofline).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def mesh_dp_axes(mesh: Mesh):
+    axes = mesh.axis_names
+    if "pod" in axes:
+        return ("pod", "data")
+    return "data"
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def spec_divides(spec: P, shape, mesh: Mesh) -> bool:
+    for dim, axes in zip(shape, tuple(spec)):
+        if axes is None:
+            continue
+        if dim % axis_size(mesh, axes) != 0:
+            return False
+    return True
+
+
+def choose_spec(shape, candidates, mesh: Mesh) -> P:
+    for c in candidates:
+        c = P(*(tuple(c) + (None,) * (len(shape) - len(tuple(c)))))
+        if spec_divides(c, shape, mesh):
+            return c
+    return P(*([None] * len(shape)))
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def _candidates(name: str, ndim: int, dp, fsdp: bool):
+    """Candidate specs (most → least preferred) over non-scan dims."""
+    f = dp if fsdp else None
+    tp = "model"
+    table = {
+        # embeddings / head: vocab over tp, else d_model over tp
+        ("embed", 2): [P(tp, f), P(None, tp)],
+        ("lm_head", 2): [P(f, tp), P(tp, None)],
+        # attention qkv [D, H, hd]: heads over tp, else head_dim over tp
+        ("wq", 3): [P(f, tp, None), P(f, None, tp), P(f, None, None)],
+        ("wk", 3): [P(f, tp, None), P(f, None, tp), P(f, None, None)],
+        ("wv", 3): [P(f, tp, None), P(f, None, tp), P(f, None, None)],
+        ("wo", 3): [P(tp, None, f), P(None, tp, f), P(None, None, f)],
+        # MLA
+        ("wdq", 2): [P(f, tp), P(f, None)],
+        ("wuq", 3): [P(None, tp, None), P(tp, None, None)],
+        ("wdkv", 2): [P(f, None)],
+        ("wuk", 3): [P(None, tp, None), P(tp, None, None)],
+        ("wuv", 3): [P(None, tp, None), P(tp, None, None)],
+        # dense MLP [D, F]
+        ("w_gate", 2): [P(f, tp), P(None, tp)],
+        ("w_up", 2): [P(f, tp), P(None, tp)],
+        ("w_down", 2): [P(tp, f), P(tp, None)],
+        # MoE experts [E, D, F]: EP over tp, else TP over F
+        ("router", 2): [P(f, None)],
+        ("w_gate", 3): [P(tp, f, None), P(None, f, tp)],
+        ("w_up", 3): [P(tp, f, None), P(None, f, tp)],
+        ("w_down", 3): [P(tp, None, f), P(None, tp, f)],
+        ("e_bias", 1): [P(None)],
+        # SSD / RG-LRU
+        ("w_in", 2): [P(f, tp), P(f, None)],
+        ("w_x", 2): [P(f, tp), P(f, None)],
+        ("w_out", 2): [P(tp, f), P(None, f)],
+        ("w_rg", 2): [P(None, tp)],
+        ("w_ig", 2): [P(None, tp)],
+        ("conv_w", 2): [P(None, tp)],
+        ("conv_b", 1): [P(tp)],
+        ("lam", 1): [P(tp)],
+    }
+    return table.get((name, ndim), [])
+
+
+def param_specs(cfg, params_like, mesh: Mesh):
+    """PartitionSpec pytree matching the params tree."""
+    dp = mesh_dp_axes(mesh)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_like)
+    specs = []
+    for path, leaf in flat:
+        p = _path_str(path)
+        name = None
+        for part in reversed(p.split("/")):
+            if not part.isdigit():
+                name = part
+                break
+        in_stack = "stacks" in p
+        shape = tuple(leaf.shape)
+        eff_shape = shape[1:] if in_stack else shape
+        cands = _candidates(name, len(eff_shape), dp, cfg.fsdp)
+        if name == "embed" and getattr(cfg, "embed_shard", "vocab") == \
+                "dmodel":
+            cands = [P(None, "model")]
+        if name == "lm_head" and getattr(cfg, "embed_shard", "vocab") == \
+                "dmodel":
+            cands = [P(None, "model"), P(dp if cfg.fsdp else None, "model")]
+        spec = choose_spec(eff_shape, cands, mesh)
+        if in_stack:
+            spec = P(None, *spec)
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_specs(p_specs, params_like, opt_like):
+    """Optimizer-state specs derived from param specs by shape matching
+    (AdamW m/v mirror params; Adafactor row/col factors drop a dim)."""
+    flat_p = jax.tree_util.tree_leaves(params_like)
+    flat_spec = jax.tree_util.tree_leaves(
+        p_specs, is_leaf=lambda x: isinstance(x, P))
+    shape_to_spec = {}
+    for leaf, spec in zip(flat_p, flat_spec):
+        sh = tuple(leaf.shape)
+        t = tuple(spec)
+        shape_to_spec.setdefault(sh, spec)
+        if len(sh) >= 1:
+            shape_to_spec.setdefault(sh[:-1], P(*t[:-1]))
+        if len(sh) >= 2:
+            shape_to_spec.setdefault(sh[:-2] + sh[-1:],
+                                     P(*(t[:-2] + t[-1:])))
+
+    def one(leaf):
+        sh = tuple(leaf.shape)
+        return shape_to_spec.get(sh, P(*([None] * len(sh))))
+
+    return jax.tree_util.tree_map(one, opt_like)
+
+
+def batch_specs(batch_like, mesh: Mesh):
+    """Input batch: dim 0 over dp (when divisible)."""
+    dp = mesh_dp_axes(mesh)
+
+    def one(leaf):
+        sh = tuple(leaf.shape)
+        if not sh:
+            return P()
+        return choose_spec(sh, [P(dp)], mesh)
+
+    return jax.tree_util.tree_map(one, batch_like)
+
+
+def cache_specs(cfg, cache_like, mesh: Mesh, *, batch_size: int):
+    """Decode caches. Layout per leaf: [repeats, B, ...].
+
+    * B > 1: batch over dp; heads/latent/head-dim over tp (candidates).
+    * B == 1 (long_500k): sequence parallelism — the cache length dim is
+      sharded over dp instead (cfg.seq_shard_decode).
+    """
+    dp = mesh_dp_axes(mesh)
+    tp = "model"
+    seq_shard = batch_size == 1 and cfg.seq_shard_decode
+
+    def cands_for(name: str, nd: int):
+        if name in ("k", "v") and nd == 5:            # [R,B,C,KH,hd]
+            if seq_shard:
+                return [P(None, None, dp, tp, None),
+                        P(None, None, dp, None, tp),
+                        P(None, None, dp, None, None)]
+            return [P(None, dp, None, tp, None),
+                    P(None, dp, None, None, tp),
+                    P(None, dp, tp, None, None),
+                    P(None, dp, None, None, None)]
+        if name in ("ckv", "krope") and nd == 4:      # [R,B,C,r]
+            if seq_shard:
+                return [P(None, None, dp, tp), P(None, None, dp, None)]
+            return [P(None, dp, None, tp), P(None, dp, None, None)]
+        if name == "k_pos" and nd == 3:               # [R,B,C]
+            if seq_shard:
+                return [P(None, None, dp)]
+            return [P(None, dp, None)]
+        if name == "state" and nd == 5:               # ssd [R,B,H,N,P]
+            b = None if seq_shard else dp
+            return [P(None, b, tp, None, None), P(None, b, None, None, None)]
+        if name == "state" and nd == 3:               # rglru [R,B,W]
+            b = None if seq_shard else dp
+            return [P(None, b, tp), P(None, b, None)]
+        if name == "conv" and nd == 4:                # [R,B,W-1,C]
+            b = None if seq_shard else dp
+            return [P(None, b, None, tp), P(None, b, None, None)]
+        return []
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_like)
+    specs = []
+    for path, leaf in flat:
+        name = _path_str(path).split("/")[-1]
+        sh = tuple(leaf.shape)
+        specs.append(choose_spec(sh, cands_for(name, len(sh)), mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def to_named(specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def abstract_with_sharding(abstract, specs, mesh: Mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct tree (dry-run params)."""
+    def one(a, s):
+        return jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                    sharding=NamedSharding(mesh, s))
+    return jax.tree_util.tree_map(one, abstract, specs)

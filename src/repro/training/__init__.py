@@ -1,0 +1,28 @@
+"""Training substrate: optimizer, schedules, checkpointing (elastic),
+gradient compression, pipeline parallelism, and the cost-model trainer."""
+from repro.training.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    schedule_lr,
+)
+from repro.training.checkpoint import (
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.training.compression import (
+    compress_int8,
+    decompress_int8,
+    compressed_allreduce,
+)
+from repro.training.trainer import CostModelTrainer, TrainerConfig
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "clip_by_global_norm",
+    "global_norm", "schedule_lr", "latest_step", "restore_checkpoint",
+    "save_checkpoint", "compress_int8", "decompress_int8",
+    "compressed_allreduce", "CostModelTrainer", "TrainerConfig",
+]

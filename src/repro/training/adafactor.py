@@ -1,0 +1,76 @@
+"""Adafactor (Shazeer & Stern, 2018), simplified: factored second moment,
+no first moment — the optimizer-state memory trick that lets 671B-param
+training fit the single-pod HBM budget (see EXPERIMENTS.md §Dry-run).
+
+State per ≥2D leaf: row/col second-moment factors (O(n+m) instead of O(nm));
+per 1D leaf: full second moment. Update is RMS-clipped like the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS1 = 1e-30
+_EPS2 = 1e-3
+
+
+def _leaf_init(p):
+    if p.ndim >= 2:
+        return {
+            "v_row": jnp.zeros(p.shape[:-1], jnp.float32),
+            "v_col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+        }
+    return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+
+def adafactor_init(params) -> dict:
+    return {
+        "factored": jax.tree_util.tree_map(_leaf_init, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _leaf_update(p, g, s, beta2, lr, clip_threshold=1.0):
+    g = g.astype(jnp.float32)
+    g2 = jnp.square(g) + _EPS1
+    if p.ndim >= 2:
+        v_row = beta2 * s["v_row"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+        v_col = beta2 * s["v_col"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+        row_mean = jnp.mean(v_row, axis=-1, keepdims=True)
+        r = v_row / jnp.maximum(row_mean, _EPS1)
+        u = g * jax.lax.rsqrt(r[..., None] * v_col[..., None, :] + _EPS1)
+        new_s = {"v_row": v_row, "v_col": v_col}
+    else:
+        v = beta2 * s["v"] + (1 - beta2) * g2
+        u = g * jax.lax.rsqrt(v + _EPS1)
+        new_s = {"v": v}
+    # RMS-clip the update
+    rms = jnp.sqrt(jnp.mean(jnp.square(u)) + _EPS1)
+    u = u / jnp.maximum(1.0, rms / clip_threshold)
+    scale = jnp.maximum(jnp.sqrt(jnp.mean(jnp.square(p.astype(jnp.float32)))),
+                        _EPS2)
+    new_p = (p.astype(jnp.float32) - lr * scale * u).astype(p.dtype)
+    return new_p, new_s
+
+
+def adafactor_update(params, grads, state, *, lr: float = 1e-2,
+                     beta2_base: float = 0.999):
+    step = state["step"] + 1
+    # increasing-beta2 schedule from the paper
+    beta2 = 1.0 - jnp.power(step.astype(jnp.float32), -0.8)
+    beta2 = jnp.minimum(beta2, beta2_base)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state["factored"])
+    new_p, new_s = [], []
+    for p, g, s in zip(flat_p, flat_g, flat_s):
+        np_, ns_ = _leaf_update(p, g, s, beta2, lr)
+        new_p.append(np_)
+        new_s.append(ns_)
+    return (jax.tree_util.tree_unflatten(treedef, new_p),
+            {"factored": jax.tree_util.tree_unflatten(treedef, new_s),
+             "step": step},
+            {"lr": jnp.asarray(lr, jnp.float32),
+             "grad_norm": jnp.sqrt(sum(jnp.sum(jnp.square(
+                 g.astype(jnp.float32))) for g in flat_g))})

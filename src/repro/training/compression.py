@@ -1,0 +1,68 @@
+"""Int8 gradient compression with error feedback.
+
+Distributed-optimization trick for bandwidth-bound data parallelism at
+1000+-node scale: gradients are quantized to int8 with a shared per-leaf
+scale before the cross-replica reduction, and the local quantization error
+is fed back into the next step's gradient (error feedback keeps SGD/Adam
+convergence; Karimireddy et al., 2019).
+
+Algorithm per leaf g (inside shard_map over the data axis):
+  1. scale = pmax(max|g|) / 127                (one scalar all-reduce)
+  2. q     = round(g / scale)  ∈ int8
+  3. s     = psum(q.int32)                     (int8 wire bytes, exact sum)
+  4. ĝ     = s * scale                         (sum of replicas' gradients)
+  5. e'    = g - q * scale                     (local error, fed back next step)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g: jnp.ndarray, scale: jnp.ndarray):
+    """Quantize with a given positive scale; returns (q_int8, local_error)."""
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    err = g - q.astype(g.dtype) * scale
+    return q, err
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    return q.astype(dtype) * scale
+
+
+def compressed_allreduce(grads, error_feedback, axis_name: str | None):
+    """All-reduce `grads` (a pytree) with int8 quantization + error feedback.
+
+    Must be called inside shard_map/pmap context over `axis_name`;
+    with axis_name=None it degrades to the identity algorithm on one device
+    (still quantizes, so the error-feedback math is exercised everywhere).
+
+    Returns (reduced_grads_mean, new_error_feedback).
+    """
+    def one(g, e):
+        g = g + e                                    # error feedback
+        amax = jnp.max(jnp.abs(g))
+        if axis_name is not None:
+            amax = jax.lax.pmax(amax, axis_name)
+        scale = jnp.maximum(amax / 127.0, 1e-12)
+        q, err = compress_int8(g, scale)
+        s = q.astype(jnp.int32)
+        if axis_name is not None:
+            s = jax.lax.psum(s, axis_name)
+            n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        else:
+            n = 1.0
+        return decompress_int8(s, scale, g.dtype) / n, err
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(error_feedback)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    red = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    err = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return red, err
+
+
+def zeros_like_error(params):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros_like(x, dtype=jnp.float32), params)

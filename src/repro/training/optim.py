@@ -1,0 +1,97 @@
+"""AdamW + gradient clipping + LR schedules (no optax in this environment).
+
+Matches the paper's training hyperparameters: tunable learning rate,
+exponential learning-rate decay, and optional global-norm gradient clipping
+(Appendix B's 'Grad. clip: norm').
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip_norm: float | None = 1.0      # None = no clipping
+    schedule: str = "exponential"            # constant | exponential | cosine
+    lr_decay: float = 0.99                   # per decay_every steps
+    decay_every: int = 10_000
+    warmup_steps: int = 0
+    total_steps: int = 100_000               # cosine horizon
+
+
+def schedule_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step_f = step.astype(jnp.float32)
+    if cfg.warmup_steps > 0:
+        warm = jnp.minimum(step_f / cfg.warmup_steps, 1.0)
+    else:
+        warm = 1.0
+    if cfg.schedule == "constant":
+        base = cfg.lr
+    elif cfg.schedule == "exponential":
+        base = cfg.lr * jnp.power(cfg.lr_decay, step_f / cfg.decay_every)
+    elif cfg.schedule == "cosine":
+        frac = jnp.clip(step_f / max(cfg.total_steps, 1), 0.0, 1.0)
+        base = cfg.lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    else:
+        raise ValueError(f"unknown schedule {cfg.schedule!r}")
+    return base * warm
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree_util.tree_map(lambda x: x * scale, tree), gn
+
+
+def adamw_init(params) -> dict:
+    zeros = jax.tree_util.tree_map(
+        lambda x: jnp.zeros_like(x, dtype=jnp.float32), params)
+    return {
+        "m": zeros,
+        "v": jax.tree_util.tree_map(jnp.zeros_like, zeros),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    """Returns (new_params, new_state, stats)."""
+    step = state["step"] + 1
+    lr = schedule_lr(cfg, step)
+    gn = global_norm(grads)
+    if cfg.grad_clip_norm is not None:
+        grads, _ = clip_by_global_norm(grads, cfg.grad_clip_norm)
+
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree_util.tree_map(
+        lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+        state["m"], grads)
+    v = jax.tree_util.tree_map(
+        lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state["v"], grads)
+    step_f = step.astype(jnp.float32)
+    mhat_scale = 1.0 / (1.0 - jnp.power(b1, step_f))
+    vhat_scale = 1.0 / (1.0 - jnp.power(b2, step_f))
+
+    def upd(p, m_, v_):
+        u = (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + cfg.eps)
+        if cfg.weight_decay > 0:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}, \
+        {"lr": lr, "grad_norm": gn}

@@ -1,0 +1,72 @@
+"""GPipe-style pipeline parallelism over a named mesh axis.
+
+Stage s holds its own slice of the layer stack; microbatch m flows through
+stage s at schedule step t = s + m; activations hop stages with
+`lax.ppermute`. Bubble overhead is the standard (S−1)/(M+S−1).
+
+This is the PP building block for the multi-pod "pod" axis (2 stages) —
+the dry-run's default pod-axis use is data-parallel, but
+`pipeline_apply` + `tests/test_pipeline.py` demonstrate the schedule is
+available and correct when layer memory, not batch, is the binding
+constraint at 1000+ nodes.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+
+def pipeline_apply(stage_fn, stage_params, x_micro, *, mesh: Mesh,
+                   axis: str = "stage"):
+    """Run a pipeline of `n_stages = mesh.shape[axis]` stages.
+
+    stage_fn(params_slice, x) -> y, with y.shape == x.shape (inter-stage
+    activations are homogeneous).
+    stage_params: pytree with leading dim n_stages on every leaf (sharded
+    over `axis`).
+    x_micro: [M, mb, ...] microbatched input (replicated).
+    Returns [M, mb, ...] outputs of the final stage.
+    """
+    n_stages = mesh.shape[axis]
+    M = x_micro.shape[0]
+    T = n_stages + M - 1
+
+    p_specs = jax.tree_util.tree_map(lambda _: P(axis), stage_params)
+
+    def per_device(params_local, xs):
+        params_local = jax.tree_util.tree_map(lambda a: a[0], params_local)
+        stage_id = jax.lax.axis_index(axis)
+        buf0 = jnp.zeros_like(xs[0])
+
+        def step(buf, t):
+            m_in = jnp.clip(t, 0, M - 1)
+            inp = jnp.where(stage_id == 0, xs[m_in], buf)
+            y = stage_fn(params_local, inp)
+            out = jnp.where(stage_id == n_stages - 1, y, 0.0)
+            nxt = jax.lax.ppermute(
+                y, axis, [(i, i + 1) for i in range(n_stages - 1)])
+            return nxt, out
+
+        _, outs = jax.lax.scan(step, buf0, jnp.arange(T))
+        # last stage emits microbatch m at step t = m + n_stages - 1
+        outs = jax.lax.dynamic_slice_in_dim(outs, n_stages - 1, M, axis=0)
+        # broadcast final-stage outputs to all stages for a replicated result
+        return jax.lax.psum(outs, axis) if n_stages > 1 else outs
+
+    fn = shard_map(per_device, mesh=mesh,
+                   in_specs=(p_specs, P()), out_specs=P(),
+                   check_vma=False)
+    return fn(stage_params, x_micro)
+
+
+def pipeline_stage_split(params_stacked, n_stages: int):
+    """Split a [L, ...]-stacked layer tree into [n_stages, L/S, ...]."""
+    def one(a):
+        L = a.shape[0]
+        assert L % n_stages == 0, (L, n_stages)
+        return a.reshape((n_stages, L // n_stages) + a.shape[1:])
+    return jax.tree_util.tree_map(one, params_stacked)

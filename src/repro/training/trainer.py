@@ -1,0 +1,232 @@
+"""Cost-model trainer: pjit/shard_map distribution, fault tolerance,
+checkpoint/resume, optional int8-compressed data parallelism.
+
+The trainer is deliberately framework-grade rather than script-grade:
+  * deterministic batch streams (seed, step, host) — restart-reproducible,
+  * SIGTERM/SIGINT-safe: a final checkpoint is written on the way out,
+  * periodic atomic checkpoints + automatic resume from the latest,
+  * metrics streamed to JSONL for the benchmark harness,
+  * data parallelism over a named mesh axis; parameters are replicated
+    (the model is ~1-10M params — DP is the right parallelism; the LM zoo
+    under repro.models exercises TP/FSDP/EP/SP instead).
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.losses import log_mse_loss, mse_loss, pairwise_rank_loss
+from repro.core.model import CostModelConfig, cost_model_apply, cost_model_init
+from repro.training import checkpoint as ckpt_lib
+from repro.training.compression import compressed_allreduce, zeros_like_error
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclass
+class TrainerConfig:
+    task: str = "tile"                   # tile | fusion | fusion_mse
+    rank_phi: str = "hinge"              # hinge | logistic (tile task)
+    steps: int = 2000
+    ckpt_every: int = 500
+    log_every: int = 100
+    keep_ckpts: int = 3
+    seed: int = 0
+    ckpt_dir: str = ""
+    metrics_path: str = ""
+    compress_grads: bool = False          # int8 + error feedback over DP axis
+    data_axis: str = "data"
+    optim: AdamWConfig = field(default_factory=AdamWConfig)
+
+
+def make_mesh_1d(axis: str = "data") -> Mesh:
+    devs = np.array(jax.devices())
+    return Mesh(devs.reshape(-1), (axis,))
+
+
+class CostModelTrainer:
+    def __init__(self, model_cfg: CostModelConfig, cfg: TrainerConfig,
+                 sampler, mesh: Mesh | None = None):
+        self.model_cfg = model_cfg
+        self.cfg = cfg
+        self.sampler = sampler
+        self.mesh = mesh or make_mesh_1d(cfg.data_axis)
+        self.step = 0
+        self._stop = False
+        self._metrics_f = None
+
+        key = jax.random.key(cfg.seed)
+        self.params = cost_model_init(key, model_cfg)
+        self.opt_state = adamw_init(self.params)
+        if cfg.compress_grads:
+            self.opt_state["ef"] = zeros_like_error(self.params)
+
+        self._train_step = self._build_train_step()
+
+    # ------------------------------------------------------------------
+    def _loss_fn(self, params, batch, targets, group_ids, valid, rng):
+        preds = cost_model_apply(params, self.model_cfg, batch, rng=rng,
+                                 deterministic=False)
+        if self.cfg.task == "tile":
+            return pairwise_rank_loss(preds, targets, group_ids, valid,
+                                      phi=self.cfg.rank_phi)
+        if self.cfg.task == "fusion":
+            return log_mse_loss(preds, targets, valid)
+        if self.cfg.task == "fusion_mse":
+            return mse_loss(preds, targets, valid)
+        if self.cfg.task == "tile_mse":
+            # ablation row 'MSE loss (not rank)': absolute (log) runtimes
+            return log_mse_loss(preds, targets, valid)
+        raise ValueError(f"unknown task {self.cfg.task!r}")
+
+    def _build_train_step(self):
+        cfg = self.cfg
+        mesh = self.mesh
+        data_spec = P(cfg.data_axis)
+        repl = NamedSharding(mesh, P())
+
+        def batch_shardings(batch_tree):
+            def spec_for(x):
+                if x.ndim >= 1:
+                    return NamedSharding(mesh, data_spec)
+                return repl
+            return jax.tree_util.tree_map(spec_for, batch_tree)
+
+        if not cfg.compress_grads:
+            @partial(jax.jit, donate_argnums=(0,))
+            def train_step(params, opt_state, batch, targets, group_ids,
+                           valid, rng):
+                loss, grads = jax.value_and_grad(self._loss_fn)(
+                    params, batch, targets, group_ids, valid, rng)
+                new_params, new_opt, stats = adamw_update(
+                    params, grads, opt_state, cfg.optim)
+                stats["loss"] = loss
+                return new_params, new_opt, stats
+            self._batch_shardings = batch_shardings
+            return train_step
+
+        # compressed-DP path: per-device grads + int8 all-reduce
+        axis = cfg.data_axis
+
+        def shmap_step(params, opt_state, batch, targets, group_ids, valid,
+                       rng):
+            ef = opt_state["ef"]
+
+            def local(params, batch, targets, group_ids, valid, ef):
+                loss, grads = jax.value_and_grad(self._loss_fn)(
+                    params, batch, targets, group_ids, valid, rng)
+                red, new_ef = compressed_allreduce(grads, ef, axis)
+                loss = jax.lax.pmean(loss, axis)
+                return loss, red, new_ef
+
+            from jax import shard_map
+            spec_params = jax.tree_util.tree_map(lambda _: P(), params)
+            spec_batch = jax.tree_util.tree_map(
+                lambda x: P(axis) if x.ndim >= 1 else P(), batch)
+            loss, grads, new_ef = shard_map(
+                local, mesh=mesh,
+                in_specs=(spec_params, spec_batch, P(axis), P(axis), P(axis),
+                          jax.tree_util.tree_map(lambda _: P(), ef)),
+                out_specs=(P(), jax.tree_util.tree_map(lambda _: P(), params),
+                           jax.tree_util.tree_map(lambda _: P(), ef)),
+                check_vma=False,
+            )(params, batch, targets, group_ids, valid, ef)
+            opt_no_ef = {k: v for k, v in opt_state.items() if k != "ef"}
+            new_params, new_opt, stats = adamw_update(
+                params, grads, opt_no_ef, cfg.optim)
+            new_opt["ef"] = new_ef
+            stats["loss"] = loss
+            return new_params, new_opt, stats
+
+        self._batch_shardings = batch_shardings
+        return jax.jit(shmap_step, donate_argnums=(0,))
+
+    # ------------------------------------------------------------------
+    def _install_signal_handlers(self):
+        def handler(signum, frame):
+            self._stop = True
+        try:
+            signal.signal(signal.SIGTERM, handler)
+            signal.signal(signal.SIGINT, handler)
+        except ValueError:
+            pass   # not on main thread (e.g. under pytest plugins)
+
+    def _log(self, record: dict):
+        if self.cfg.metrics_path:
+            if self._metrics_f is None:
+                os.makedirs(os.path.dirname(self.cfg.metrics_path) or ".",
+                            exist_ok=True)
+                self._metrics_f = open(self.cfg.metrics_path, "a")
+            self._metrics_f.write(json.dumps(record) + "\n")
+            self._metrics_f.flush()
+
+    def save(self):
+        if not self.cfg.ckpt_dir:
+            return
+        state = {"params": self.params, "opt": self.opt_state}
+        ckpt_lib.save_checkpoint(
+            self.cfg.ckpt_dir, self.step, state,
+            meta={"model_cfg": self.model_cfg.to_dict(),
+                  "task": self.cfg.task},
+            keep=self.cfg.keep_ckpts)
+
+    def maybe_resume(self) -> bool:
+        if not self.cfg.ckpt_dir:
+            return False
+        latest = ckpt_lib.latest_step(self.cfg.ckpt_dir)
+        if latest is None:
+            return False
+        like = {"params": self.params, "opt": self.opt_state}
+        state, step, _ = ckpt_lib.restore_checkpoint(self.cfg.ckpt_dir, like)
+        self.params, self.opt_state = state["params"], state["opt"]
+        self.step = step
+        return True
+
+    # ------------------------------------------------------------------
+    def run(self, steps: int | None = None, *, resume: bool = True,
+            eval_fn: Callable[[dict, int], dict] | None = None,
+            eval_every: int = 0) -> dict:
+        cfg = self.cfg
+        total = steps if steps is not None else cfg.steps
+        if resume:
+            self.maybe_resume()
+        self._install_signal_handlers()
+        t0 = time.time()
+        last_loss = float("nan")
+        while self.step < total and not self._stop:
+            b = self.sampler.batch(self.step)
+            rng = jax.random.fold_in(jax.random.key(cfg.seed + 1), self.step)
+            group_ids = getattr(b, "group_ids",
+                                np.zeros_like(b.targets, np.int32))
+            self.params, self.opt_state, stats = self._train_step(
+                self.params, self.opt_state, b.graphs,
+                jnp.asarray(b.targets), jnp.asarray(group_ids),
+                jnp.asarray(b.valid), rng)
+            self.step += 1
+            if self.step % cfg.log_every == 0 or self.step == total:
+                last_loss = float(stats["loss"])
+                self._log({"step": self.step, "loss": last_loss,
+                           "lr": float(stats["lr"]),
+                           "grad_norm": float(stats["grad_norm"]),
+                           "wall": time.time() - t0})
+            if cfg.ckpt_every and self.step % cfg.ckpt_every == 0:
+                self.save()
+            if eval_fn and eval_every and self.step % eval_every == 0:
+                ev = eval_fn(self.params, self.step)
+                self._log({"step": self.step, **{f"eval/{k}": v
+                                                 for k, v in ev.items()}})
+        self.save()
+        if self._metrics_f:
+            self._metrics_f.close()
+            self._metrics_f = None
+        return {"step": self.step, "loss": last_loss,
+                "wall": time.time() - t0, "interrupted": self._stop}

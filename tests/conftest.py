@@ -1,0 +1,8 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Smoke tests and benches must see exactly the real device count (1 CPU).
+# The 512-device override happens ONLY inside repro.launch.dryrun/probes,
+# which run as separate processes.

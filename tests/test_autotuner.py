@@ -1,0 +1,83 @@
+"""Autotuner behavior tests (paper §7 mechanics)."""
+import numpy as np
+import pytest
+
+from repro.autotuner import (
+    autotune_program_tiles,
+    simulated_annealing_fusion,
+    tune_kernel_tiles,
+)
+from repro.core.analytical import AnalyticalModel
+from repro.core.simulator import TPUSimulator
+from repro.data.fusion import apply_fusion, default_fusion
+from repro.data.synthetic import generate_program
+
+
+def _kernels(fam="attention", idx=0, seed=3):
+    g = generate_program(fam, idx, seed=seed)
+    return g, apply_fusion(g, default_fusion(g))
+
+
+def test_oracle_scorer_zero_regret():
+    """Top-1 with the simulator itself as scorer must find the optimum."""
+    sim = TPUSimulator()
+    _, kernels = _kernels()
+
+    def oracle(kernel, tiles):
+        return np.array([sim.measure(kernel.with_tile(t)) for t in tiles])
+
+    for k in kernels[:4]:
+        r = tune_kernel_tiles(k, sim, scorer=oracle, top_k=1, max_configs=16)
+        assert r.regret == pytest.approx(0.0, abs=1e-9)
+        assert r.hardware_evals == 1
+
+
+def test_topk_monotone_regret():
+    """Larger k can only reduce (or keep) the chosen runtime."""
+    sim = TPUSimulator()
+    am = AnalyticalModel()
+
+    def scorer(kernel, tiles):
+        return np.array([am.predict(kernel, t) for t in tiles])
+
+    _, kernels = _kernels("mlp", 0, seed=1)
+    k = max(kernels, key=lambda x: x.num_nodes)
+    r1 = tune_kernel_tiles(k, sim, scorer=scorer, top_k=1, max_configs=24)
+    r5 = tune_kernel_tiles(k, sim, scorer=scorer, top_k=5, max_configs=24)
+    rall = tune_kernel_tiles(k, sim, scorer=None, max_configs=24)
+    assert r5.chosen_runtime <= r1.chosen_runtime + 1e-12
+    assert rall.regret == pytest.approx(0.0, abs=1e-9)
+    assert r1.hardware_evals < r5.hardware_evals < rall.hardware_evals
+
+
+def test_program_tile_autotuning_totals():
+    sim = TPUSimulator()
+    _, kernels = _kernels("norm", 0, seed=2)
+    res = autotune_program_tiles(kernels, sim, scorer=None, max_configs=12)
+    assert res.total_runtime == pytest.approx(res.best_runtime)
+
+
+def test_fusion_sa_improves_and_budget():
+    sim = TPUSimulator()
+    prog, _ = _kernels("attention", 1, seed=0)
+    r = simulated_annealing_fusion(prog, sim, model_cost=None,
+                                   hardware_budget_s=40, eval_seconds=2.0,
+                                   seed=0)
+    assert r.best_runtime <= r.default_runtime * (1 + 1e-9)
+    assert r.hardware_seconds_used <= 40 + 2.0
+    assert r.speedup >= 1.0
+
+
+def test_fusion_sa_model_mode_uses_less_hardware():
+    sim = TPUSimulator()
+    am = AnalyticalModel()
+    prog, _ = _kernels("attention", 1, seed=0)
+    model_cost = lambda ks: sum(am.predict(k) for k in ks)   # noqa: E731
+    r_hw = simulated_annealing_fusion(prog, sim, model_cost=None,
+                                      hardware_budget_s=40, seed=1)
+    r_cm = simulated_annealing_fusion(prog, sim, model_cost=model_cost,
+                                      hardware_budget_s=10, model_steps=150,
+                                      seed=1)
+    assert r_cm.hardware_evals < r_hw.hardware_evals
+    # with far less hardware, the model-guided search stays competitive
+    assert r_cm.best_runtime <= r_hw.best_runtime * 1.15

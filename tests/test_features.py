@@ -1,0 +1,96 @@
+"""Feature-extraction unit + property tests (paper §3.1 encoding)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import features as F
+from repro.core import opset
+from repro.core.graph import KernelGraph, Node
+
+
+def _mk_kernel(shape=(64, 128), tile=(8, 128)):
+    nodes = [
+        Node(opset.PARAMETER, shape, 4),
+        Node(opset.PARAMETER, (shape[1], 64), 4),
+        Node(opset.DOT, (shape[0], 64), 4, (0, 1), contract_dim=shape[1]),
+        Node(opset.EXP, (shape[0], 64), 4, (2,), is_output=True),
+    ]
+    return KernelGraph(nodes, program="t", name="k", tile_size=tile)
+
+
+@given(st.lists(st.integers(min_value=1, max_value=10_000), min_size=0,
+                max_size=10))
+@settings(max_examples=100, deadline=None)
+def test_subvec_sum_product(values):
+    k = 6
+    v = F._subvec(values, k)
+    assert len(v) == k + 3
+    arr = np.asarray(values, np.float64)
+    assert v[k] == pytest.approx(float(arr.sum()) if values else 0.0)
+    expected_prod = float(arr.prod()) if values else 0.0
+    assert v[k + 1] == pytest.approx(expected_prod, rel=1e-9)
+    assert v[k + 2] == pytest.approx(np.log1p(expected_prod), rel=1e-6)
+    # pad/truncate
+    assert all(v[len(values[:k]):k] == 0)
+
+
+def test_node_feature_dim_consistent():
+    g = _mk_kernel()
+    nf = F.node_features(g)
+    assert nf.shape == (4, F.NODE_FEATURE_DIM)
+    kf = F.kernel_features(g)
+    assert kf.shape == (F.KERNEL_FEATURE_DIM,)
+
+
+def test_kernel_features_tile_and_static_toggles():
+    g = _mk_kernel(tile=(8, 128))
+    full = F.kernel_features(g)
+    no_static = F.kernel_features(g, include_static_perf=False)
+    no_tile = F.kernel_features(g, include_tile=False)
+    assert np.any(full[F.STATIC_PERF_SLICE] != 0)
+    assert np.all(no_static[F.STATIC_PERF_SLICE] == 0)
+    assert np.all(no_tile[F.TILE_SLICE] == 0)
+    # tile change only affects the tile slice
+    g2 = _mk_kernel(tile=(64, 64))
+    f2 = F.kernel_features(g2)
+    assert np.any(full[F.TILE_SLICE] != f2[F.TILE_SLICE])
+    assert np.allclose(full[F.STATIC_PERF_SLICE], f2[F.STATIC_PERF_SLICE])
+
+
+def test_adjacency_directed():
+    g = _mk_kernel()
+    adj = F.adjacency(g, 8)
+    # edges 0->2, 1->2, 2->3
+    assert adj[2, 0] == 1 and adj[2, 1] == 1 and adj[3, 2] == 1
+    assert adj[0, 2] == 0
+    assert adj.sum() == 3
+
+
+def test_encode_padding_and_mask():
+    g = _mk_kernel()
+    enc = F.encode_graph(g, 16)
+    assert enc["node_mask"].sum() == 4
+    assert np.all(enc["node_feats"][4:] == 0)
+    assert np.all(enc["opcodes"][4:] == 0)
+
+
+def test_normalizer_unit_range():
+    gs = [_mk_kernel(shape=(2 ** i, 128)) for i in range(3, 8)]
+    norm = F.fit_normalizer(gs)
+    for g in gs:
+        nf = norm.transform_node(F.node_features(g))
+        kf = norm.transform_kernel(F.kernel_features(g))
+        assert nf.min() >= 0 and nf.max() <= 1
+        assert kf.min() >= 0 and kf.max() <= 1
+    # round trip via dict
+    norm2 = F.FeatureNormalizer.from_dict(norm.to_dict())
+    assert np.allclose(norm2.node_min, norm.node_min)
+
+
+def test_encode_batch_shapes():
+    gs = [_mk_kernel(), _mk_kernel(shape=(32, 32), tile=(32, 32))]
+    b = F.encode_batch(gs, 8)
+    assert b.opcodes.shape == (2, 8)
+    assert b.node_feats.shape == (2, 8, F.NODE_FEATURE_DIM)
+    assert b.adj.shape == (2, 8, 8)
+    assert b.kernel_feats.shape == (2, F.KERNEL_FEATURE_DIM)

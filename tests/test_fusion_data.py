@@ -1,0 +1,142 @@
+"""Fusion machinery + dataset construction tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import opset
+from repro.core.simulator import TPUSimulator, tile_fits_vmem
+from repro.data.corpus import filter_by_programs, kernel_hash, split_programs
+from repro.data.fusion import (
+    FusionDecision,
+    apply_fusion,
+    default_fusion,
+    fusable_edges,
+    no_fusion,
+    random_fusion,
+)
+from repro.data.fusion_dataset import build_fusion_dataset
+from repro.data.sampler import BalancedSampler, ShardPlanner, TileBatchSampler
+from repro.data.synthetic import FAMILIES, generate_corpus, generate_program
+from repro.data.tile_dataset import build_tile_dataset, enumerate_tiles
+from repro.core.features import fit_normalizer
+
+
+def test_generator_deterministic():
+    a = generate_program("mlp", 3, seed=7)
+    b = generate_program("mlp", 3, seed=7)
+    assert kernel_hash(a) == kernel_hash(b)
+    c = generate_program("mlp", 3, seed=8)
+    assert kernel_hash(a) != kernel_hash(c)
+
+
+def test_all_families_build_valid_programs():
+    for fam in FAMILIES:
+        g = generate_program(fam, 0, seed=1)
+        assert g.num_nodes > 3
+        assert any(n.is_output for n in g.nodes)
+        # topological ordering enforced in the constructor
+
+
+@pytest.mark.parametrize("fam", ["attention", "cnn", "mlp"])
+def test_fusion_partition_covers_all_compute_nodes(fam):
+    g = generate_program(fam, 1, seed=0)
+    for dec in (no_fusion(g), default_fusion(g)):
+        kernels = apply_fusion(g, dec)
+        n_compute = sum(1 for n in g.nodes
+                        if n.op not in (opset.PARAMETER, opset.CONSTANT))
+        total = sum(sum(1 for n in k.nodes if n.op is not opset.PARAMETER)
+                    for k in kernels)
+        assert total == n_compute
+
+
+def test_fusion_respects_contraction_rule():
+    g = generate_program("attention", 2, seed=0)
+    edges = fusable_edges(g)
+    dec = FusionDecision(tuple(True for _ in edges))   # fuse everything
+    for k in apply_fusion(g, dec):
+        n_contract = sum(1 for n in k.nodes if n.op.fusion_root_only)
+        assert n_contract <= 1
+
+
+def test_default_fusion_reduces_kernel_count():
+    g = generate_program("norm", 0, seed=0)
+    n_no = len(apply_fusion(g, no_fusion(g)))
+    n_def = len(apply_fusion(g, default_fusion(g)))
+    assert n_def < n_no
+
+
+@given(st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=25, deadline=None)
+def test_random_fusion_valid_for_any_seed(seed):
+    g = generate_program("rnn", 0, seed=1)
+    rng = np.random.default_rng(seed)
+    dec = random_fusion(g, rng)
+    kernels = apply_fusion(g, dec)
+    assert kernels
+    for k in kernels:
+        k._check_topo()
+
+
+def test_enumerate_tiles_valid_and_bounded():
+    g = generate_program("mlp", 0, seed=0)
+    kernels = apply_fusion(g, default_fusion(g))
+    sim = TPUSimulator()
+    for k in kernels[:3]:
+        tiles = enumerate_tiles(k, max_configs=32, hw=sim.hw)
+        assert len(tiles) <= 32
+        for t in tiles:
+            assert tile_fits_vmem(k, t, sim.hw)
+            assert len(t) == len(k.root.shape)
+
+
+def test_splits_disjoint_and_complete():
+    progs = [p.program for p in generate_corpus(30, seed=0)]
+    for method in ("random", "manual"):
+        sp = split_programs(progs, method=method)
+        all_names = sp["train"] + sp["val"] + sp["test"]
+        assert sorted(all_names) == sorted(set(progs))
+        assert not (set(sp["train"]) & set(sp["test"]))
+        assert sp["test"], method
+    manual = split_programs(progs, method="manual")
+    for name in manual["test"]:
+        assert name.startswith(("convdraw", "embedding"))
+
+
+def test_datasets_and_samplers():
+    progs = generate_corpus(8, seed=0)
+    sim = TPUSimulator()
+    tds = build_tile_dataset(progs, sim, max_configs_per_kernel=8)
+    fds = build_fusion_dataset(progs, sim, configs_per_program=4)
+    assert tds.num_samples > 50
+    assert fds.num_samples > 30
+    # dedup: all hashes unique
+    hs = [kernel_hash(r.kernel) for r in fds.records]
+    assert len(hs) == len(set(hs))
+
+    from repro.data.tile_dataset import fit_tile_normalizer
+    norm = fit_tile_normalizer(tds.records)
+    ts = TileBatchSampler(tds.records, norm, kernels_per_batch=2,
+                          configs_per_kernel=4, max_nodes=48)
+    b1, b2 = ts.batch(5), ts.batch(5)
+    np.testing.assert_array_equal(b1.targets, b2.targets)      # determinism
+    assert set(np.asarray(b1.group_ids)) == {0, 1}
+    bs = BalancedSampler(fds.records, norm, batch_size=8, max_nodes=48)
+    fb = bs.batch(0)
+    assert fb.targets.shape == (8,)
+    assert (fb.targets > 0).all()
+
+    # records filter
+    sub = filter_by_programs(tds.records, [tds.records[0].program])
+    assert all(r.program == tds.records[0].program for r in sub)
+
+
+def test_shard_planner_straggler_takeover():
+    pl = ShardPlanner(4)
+    healthy = pl.plan(0)
+    assert healthy == {0: [0], 1: [1], 2: [2], 3: [3]}
+    degraded = pl.plan(0, frozenset({1, 2}))
+    covered = sorted(s for shards in degraded.values() for s in shards)
+    assert covered == [0, 1, 2, 3]           # all shards still consumed
+    assert set(degraded) == {0, 3}           # only healthy hosts work
+    # deterministic
+    assert degraded == pl.plan(0, frozenset({1, 2}))

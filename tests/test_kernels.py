@@ -1,0 +1,137 @@
+"""Per-kernel validation: shape/dtype sweeps against ref.py oracles,
+interpret=True (CPU container; TPU is the lowering target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.graph_aggregate.ops import graph_aggregate
+from repro.kernels.graph_aggregate.ref import graph_aggregate_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+RNG = np.random.default_rng(0)
+
+
+# ------------------------------------------------------------------ flash
+FLASH_CASES = [
+    # (B, S, H, KH, hd, causal, window, dtype)
+    (1, 64, 2, 2, 32, True, None, jnp.float32),
+    (2, 128, 4, 2, 64, True, None, jnp.float32),
+    (1, 96, 4, 1, 32, True, 32, jnp.float32),        # MQA + SWA
+    (2, 64, 8, 2, 16, False, None, jnp.float32),
+    (1, 128, 2, 2, 64, True, 64, jnp.bfloat16),
+    (1, 80, 3, 3, 48, True, None, jnp.float32),      # ragged block edges
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES, ids=str)
+def test_flash_attention_matches_ref(case):
+    B, S, H, KH, hd, causal, window, dtype = case
+    q = jnp.asarray(RNG.normal(0, 1, (B, S, H, hd)), dtype)
+    k = jnp.asarray(RNG.normal(0, 1, (B, S, KH, hd)), dtype)
+    v = jnp.asarray(RNG.normal(0, 1, (B, S, KH, hd)), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=32, block_k=32, interpret=True)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal=causal,
+                        window=window).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_block_shape_invariance():
+    """Different BlockSpec tilings must give identical results — the
+    property the tile-size autotuner relies on."""
+    B, S, H, hd = 1, 128, 2, 32
+    q = jnp.asarray(RNG.normal(0, 1, (B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (B, S, H, hd)), jnp.float32)
+    outs = [flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+            for bq, bk in [(32, 32), (64, 32), (32, 64), (128, 128)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_flash_matches_model_chunked_attention():
+    """The model's jnp chunked attention and the Pallas kernel agree."""
+    from repro.models.layers import chunked_attention
+    B, S, H, KH, hd = 1, 64, 4, 2, 16
+    q = jnp.asarray(RNG.normal(0, 1, (B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (B, S, KH, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (B, S, KH, hd)), jnp.float32)
+    a = chunked_attention(q, k, v, causal=True, window=None, block_kv=32)
+    b = flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                        interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                               atol=2e-5)
+
+
+# --------------------------------------------------------------- aggregate
+AGG_CASES = [(1, 8, 16, 32, "relu", True), (3, 16, 32, 64, "relu", False),
+             (2, 48, 64, 160, "none", True), (1, 64, 48, 96, "relu", True)]
+
+
+@pytest.mark.parametrize("case", AGG_CASES, ids=str)
+def test_graph_aggregate_matches_ref(case):
+    B, N, D, F, act, mean = case
+    adj = (RNG.random((B, N, N)) < 0.15).astype(np.float32)
+    x = RNG.normal(0, 1, (B, N, D)).astype(np.float32)
+    w = RNG.normal(0, 1, (D, F)).astype(np.float32)
+    out = graph_aggregate(jnp.asarray(adj), jnp.asarray(x), jnp.asarray(w),
+                          act=act, mean=mean, block_f=64, interpret=True)
+    ref = graph_aggregate_ref(adj, x, w, act=act, mean=mean)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(min_value=2, max_value=24),
+       st.integers(min_value=1, max_value=4))
+@settings(max_examples=10, deadline=None)
+def test_graph_aggregate_property(n, b):
+    adj = (RNG.random((b, n, n)) < 0.3).astype(np.float32)
+    x = RNG.normal(0, 1, (b, n, 8)).astype(np.float32)
+    w = RNG.normal(0, 1, (8, 16)).astype(np.float32)
+    out = graph_aggregate(jnp.asarray(adj), jnp.asarray(x), jnp.asarray(w),
+                          block_f=16, interpret=True)
+    ref = graph_aggregate_ref(adj, x, w)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-4)
+
+
+def test_graph_aggregate_isolated_nodes_zero():
+    adj = np.zeros((1, 8, 8), np.float32)
+    x = RNG.normal(0, 1, (1, 8, 8)).astype(np.float32)
+    w = RNG.normal(0, 1, (8, 8)).astype(np.float32)
+    out = graph_aggregate(jnp.asarray(adj), jnp.asarray(x), jnp.asarray(w),
+                          interpret=True)
+    assert float(jnp.max(jnp.abs(out))) == 0.0
+
+
+# --------------------------------------------------------------- ssd scan
+SSD_CASES = [(1, 2, 1, 8, 8), (2, 4, 3, 16, 8), (1, 8, 5, 32, 16),
+             (2, 16, 2, 64, 32)]
+
+
+@pytest.mark.parametrize("case", SSD_CASES, ids=str)
+def test_ssd_scan_matches_ref(case):
+    B, nc, H, N, P = case
+    S = RNG.normal(0, 1, (B, nc, H, N, P)).astype(np.float32)
+    d = RNG.uniform(0.05, 0.999, (B, nc, H)).astype(np.float32)
+    hb, hf = ssd_scan(jnp.asarray(S), jnp.asarray(d), interpret=True)
+    rb, rf = ssd_scan_ref(jnp.asarray(S), jnp.asarray(d))
+    np.testing.assert_allclose(np.asarray(hb), np.asarray(rb), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(rf), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_ssd_scan_first_chunk_state_is_zero():
+    S = jnp.ones((1, 3, 1, 4, 4))
+    d = jnp.full((1, 3, 1), 0.5)
+    hb, _ = ssd_scan(S, d, interpret=True)
+    assert float(jnp.max(jnp.abs(hb[:, 0]))) == 0.0

@@ -1,0 +1,95 @@
+"""Objective (Eq. 1) and metric (Eq. 2, Kendall, MAPE) tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.losses import log_mse_loss, mse_loss, pairwise_rank_loss
+from repro.core.metrics import kendall_tau, mape, tile_size_ape
+
+
+def test_rank_loss_perfect_order_with_margin():
+    # predictions with margin >= 1 in the true order => hinge loss 0
+    y_true = jnp.array([1.0, 2.0, 3.0])
+    y_pred = jnp.array([0.0, 2.0, 4.0])
+    l = pairwise_rank_loss(y_pred, y_true, phi="hinge")
+    assert float(l) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_rank_loss_worst_order_positive():
+    y_true = jnp.array([1.0, 2.0, 3.0])
+    y_pred = jnp.array([3.0, 2.0, 1.0])
+    l = pairwise_rank_loss(y_pred, y_true, phi="hinge")
+    assert float(l) > 1.0
+
+
+def test_rank_loss_group_masking():
+    # cross-group pairs must not contribute: two groups with opposite order
+    y_true = jnp.array([1.0, 2.0, 10.0, 20.0])
+    y_pred = jnp.array([0.0, 5.0, 100.0, 200.0])   # correct within groups
+    groups = jnp.array([0, 0, 1, 1])
+    l = pairwise_rank_loss(y_pred, y_true, groups, phi="hinge")
+    assert float(l) == pytest.approx(0.0, abs=1e-6)
+    # without groups, cross pairs (e.g. 5 vs 100) are fine too here; flip
+    # group 1 order to check masking really isolates:
+    y_pred2 = jnp.array([0.0, 5.0, 200.0, 100.0])  # wrong within group 1
+    l2 = pairwise_rank_loss(y_pred2, y_true, groups, phi="hinge")
+    assert float(l2) > 0
+
+
+@given(st.lists(st.floats(min_value=-5, max_value=5), min_size=2,
+                max_size=12))
+@settings(max_examples=50, deadline=None)
+def test_rank_loss_nonnegative(preds):
+    p = jnp.asarray(preds, jnp.float32)
+    t = jnp.arange(len(preds), dtype=jnp.float32)
+    for phi in ("hinge", "logistic"):
+        l = pairwise_rank_loss(p, t, phi=phi)
+        assert float(l) >= 0.0
+
+
+def test_log_mse_matches_manual():
+    preds = jnp.array([0.0, 1.0])
+    targets = jnp.array([1.0, np.e])
+    l = log_mse_loss(preds, targets)
+    assert float(l) == pytest.approx(0.0, abs=1e-9)
+
+
+def test_valid_mask_in_losses():
+    preds = jnp.array([0.0, 100.0])
+    targets = jnp.array([1.0, 1.0])
+    v = jnp.array([1.0, 0.0])
+    assert float(log_mse_loss(preds, targets, v)) == pytest.approx(0.0,
+                                                                   abs=1e-9)
+    assert float(mse_loss(preds, targets, v)) == pytest.approx(1.0, abs=1e-6)
+
+
+def test_kendall_extremes_and_brute_force():
+    assert kendall_tau([1, 2, 3, 4], [10, 20, 30, 40]) == 1.0
+    assert kendall_tau([4, 3, 2, 1], [10, 20, 30, 40]) == -1.0
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        a = rng.normal(size=7)
+        b = rng.normal(size=7)
+        # brute force
+        conc = 0
+        n = len(a)
+        for i in range(n):
+            for j in range(i + 1, n):
+                conc += np.sign(a[i] - a[j]) * np.sign(b[i] - b[j])
+        assert kendall_tau(a, b) == pytest.approx(conc / (n * (n - 1) / 2))
+
+
+def test_tile_size_ape_eq2():
+    # kernel 1: picks config with runtime 1.2 while best is 1.0
+    # kernel 2: picks the true best (2.0)
+    per_kernel = [
+        {"true": [1.0, 1.2, 3.0], "pred": [5.0, 1.0, 9.0]},
+        {"true": [2.0, 4.0], "pred": [0.1, 0.9]},
+    ]
+    # sum |chosen - best| = 0.2 ; sum best = 3.0 -> 6.666%
+    assert tile_size_ape(per_kernel) == pytest.approx(100 * 0.2 / 3.0)
+
+
+def test_mape():
+    assert mape([1.1, 0.9], [1.0, 1.0]) == pytest.approx(10.0, rel=1e-6)

@@ -1,0 +1,209 @@
+"""Model-zoo tests.
+
+Per assignment: every architecture gets a SMOKE test instantiating a
+reduced config of the same family and running one forward/train step on CPU
+asserting output shapes + no NaNs. Plus decode-vs-forward consistency (the
+serving path must agree with the training path) and config-spec checks for
+the FULL configs (exercised for real only by the dry-run).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import SHAPES, get_config, get_smoke_config, list_archs, \
+    shape_applicable
+from repro.models import lm
+from repro.models.config import SMOKE_SHAPE, ShapeSpec
+from repro.models.inputs import input_specs, make_batch
+
+ALL_ARCHS = list_archs()
+
+
+def test_registry_has_all_ten():
+    assert len(ALL_ARCHS) == 10
+
+
+# --------------------------------------------------------- full-config spec
+FULL_SPEC = {
+    "h2o-danube-3-4b": dict(L=24, d=3840, H=32, KH=8, dff=10240, V=32000),
+    "yi-9b": dict(L=48, d=4096, H=32, KH=4, dff=11008, V=64000),
+    "yi-34b": dict(L=60, d=7168, H=56, KH=8, dff=20480, V=64000),
+    "qwen3-14b": dict(L=40, d=5120, H=40, KH=8, dff=17408, V=151936),
+    "mamba2-2.7b": dict(L=64, d=2560, V=50280),
+    "recurrentgemma-9b": dict(L=38, d=4096, H=16, KH=1, dff=12288, V=256000),
+    "granite-moe-3b-a800m": dict(L=32, d=1536, H=24, KH=8, V=49155,
+                                 experts=40, topk=8),
+    "deepseek-v3-671b": dict(L=61, d=7168, H=128, V=129280, experts=256,
+                             topk=8),
+    "musicgen-large": dict(L=48, d=2048, H=32, KH=32, dff=8192, V=2048),
+    "llava-next-34b": dict(L=60, d=7168, H=56, KH=8, dff=20480, V=64000),
+}
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    spec = FULL_SPEC[arch]
+    assert cfg.num_layers == spec["L"], arch
+    assert cfg.d_model == spec["d"]
+    assert cfg.vocab_size == spec["V"]
+    if "H" in spec:
+        assert cfg.num_heads == spec["H"]
+    if "KH" in spec:
+        assert cfg.num_kv_heads == spec["KH"]
+    if "dff" in spec:
+        assert cfg.d_ff == spec["dff"]
+    if "experts" in spec:
+        assert cfg.moe.num_experts == spec["experts"]
+        assert cfg.moe.top_k == spec["topk"]
+
+
+def test_deepseek_param_count_near_671b():
+    cfg = get_config("deepseek-v3-671b")
+    n = lm.analytic_param_count(cfg)
+    assert 6.4e11 < n < 7.0e11, n
+
+
+def test_long_500k_applicability_rule():
+    long = SHAPES["long_500k"]
+    applicable = {a for a in ALL_ARCHS
+                  if shape_applicable(get_config(a), long)[0]}
+    assert applicable == {"h2o-danube-3-4b", "mamba2-2.7b",
+                          "recurrentgemma-9b"}
+
+
+# ------------------------------------------------------------- smoke steps
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params = lm.init_params(jax.random.key(0), cfg)
+    batch = make_batch(cfg, SMOKE_SHAPE)
+    opt_init, _ = lm.make_optimizer(cfg)
+    opt = opt_init(params)
+    step = jax.jit(lm.train_step_fn(cfg))
+    new_params, new_opt, stats = step(params, opt, batch)
+    loss = float(stats["loss"])
+    assert np.isfinite(loss) and loss > 0
+    # shapes preserved
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(new_params)):
+        assert a.shape == b.shape
+    # params actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                              b.astype(jnp.float32)))) > 0
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(new_params)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_shapes_no_nan(arch):
+    cfg = get_smoke_config(arch)
+    params = lm.init_params(jax.random.key(0), cfg)
+    batch = make_batch(cfg, SMOKE_SHAPE)
+    x = lm._embed_inputs(params, cfg, batch)
+    h = lm.forward_trunk(params, cfg, x)
+    logits = lm.logits_fn(params, cfg, h)
+    B = SMOKE_SHAPE.global_batch
+    assert logits.shape == (B, SMOKE_SHAPE.seq_len, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+# ----------------------------------------------- decode == forward parity
+DECODE_ARCHS = ["yi-9b", "h2o-danube-3-4b", "qwen3-14b", "mamba2-2.7b",
+                "recurrentgemma-9b", "granite-moe-3b-a800m",
+                "deepseek-v3-671b", "musicgen-large", "yi-34b",
+                "llava-next-34b"]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    """logits from [prefill(S-1 tokens) + decode(token S-1)] must equal the
+    full forward's last-position logits."""
+    cfg = get_smoke_config(arch)
+    if cfg.embed_inputs or cfg.num_patch_tokens:
+        pytest.skip("frontend-stub archs decode from tokens; parity is "
+                    "covered by the text archs sharing the same backbone")
+    S = 33  # S-1=32 divisible by smoke ssd chunk (16)
+    params = lm.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(1)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, S)), jnp.int32)
+
+    # full forward
+    x = lm._embed_inputs(params, cfg, {"tokens": tokens})
+    h = lm.forward_trunk(params, cfg, x)
+    full_logits = lm.logits_fn(params, cfg, h)[:, -1, :]
+
+    # prefill on S-1, decode token S-1
+    prefill = lm.prefill_step_fn(cfg, capacity=S)
+    _, cache = prefill(params, {"tokens": tokens[:, :S - 1]})
+    decode = lm.decode_step_fn(cfg)
+    logits, cache = decode(params, cache, tokens[:, S - 1:S],
+                           jnp.asarray(S - 1, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits[:, 0, :]),
+                               np.asarray(full_logits),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_decode_steps_chain(tmp_path):
+    """Multi-step decode stays finite and cache positions advance."""
+    cfg = get_smoke_config("h2o-danube-3-4b")
+    params = lm.init_params(jax.random.key(0), cfg)
+    prefill = lm.prefill_step_fn(cfg, capacity=64)
+    decode = jax.jit(lm.decode_step_fn(cfg))
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+    logits, cache = prefill(params, {"tokens": tokens})
+    for t in range(16, 24):
+        nxt = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        logits, cache = decode(params, cache, nxt, jnp.asarray(t, jnp.int32))
+        assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+def test_microbatch_accumulation_invariance():
+    """Same global batch, different microbatch splits -> same loss/grads."""
+    cfg = get_smoke_config("yi-9b")
+    params = lm.init_params(jax.random.key(0), cfg)
+    batch = make_batch(cfg, ShapeSpec("t", 32, 4, "train"))
+    opt_init, _ = lm.make_optimizer(cfg)
+    losses = []
+    for mb in (1, 2, 4):
+        cfg_mb = dataclasses.replace(cfg, microbatch=mb)
+        step = jax.jit(lm.train_step_fn(cfg_mb))
+        _, _, stats = step(params, opt_init(params), batch)
+        losses.append(float(stats["loss"]))
+    assert losses[0] == pytest.approx(losses[1], rel=1e-4)
+    assert losses[0] == pytest.approx(losses[2], rel=1e-4)
+
+
+def test_unrolled_probe_paths_match_scanned():
+    """scan_layers/scan_microbatch=False (roofline probes) must compute the
+    same loss as the scanned paths."""
+    cfg = get_smoke_config("recurrentgemma-9b")
+    params = lm.init_params(jax.random.key(0), cfg)
+    batch = make_batch(cfg, ShapeSpec("t", 32, 4, "train"))
+    opt_init, _ = lm.make_optimizer(cfg)
+    step_scan = jax.jit(lm.train_step_fn(cfg))
+    cfg_u = dataclasses.replace(cfg, scan_layers=False,
+                                scan_microbatch=False)
+    step_unroll = jax.jit(lm.train_step_fn(cfg_u))
+    _, _, s1 = step_scan(params, opt_init(params), batch)
+    _, _, s2 = step_unroll(params, opt_init(params), batch)
+    assert float(s1["loss"]) == pytest.approx(float(s2["loss"]), rel=1e-5)
+
+
+def test_input_specs_cover_all_cells():
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, _ = shape_applicable(cfg, shape)
+            if not ok:
+                continue
+            specs = input_specs(cfg, shape)
+            assert specs, (arch, shape.name)
+            for v in jax.tree_util.tree_leaves(specs):
+                assert isinstance(v, jax.ShapeDtypeStruct)

@@ -1,0 +1,92 @@
+"""Roofline machinery tests: HLO collective parser, MODEL_FLOPS, probe
+extrapolation algebra, fused-memory estimate sanity."""
+import numpy as np
+import pytest
+
+from repro.launch.lowering import _shape_bytes, collective_bytes_from_hlo
+from repro.models import SHAPES, get_config
+from repro.roofline.analysis import (
+    ROOFLINE_HW,
+    active_param_count,
+    analytic_memory_bytes,
+    model_flops,
+)
+
+
+def test_shape_bytes_parser():
+    assert _shape_bytes("f32[128,1024]{1,0}") == 128 * 1024 * 4
+    assert _shape_bytes("bf16[2,3]") == 12
+    assert _shape_bytes("(f32[8], s8[16])") == 32 + 16
+    assert _shape_bytes("pred[]") == 1          # scalar: one element
+    assert _shape_bytes("u32[7]") == 28
+
+
+def test_collective_parser_counts_and_dedups_start_done():
+    hlo = """
+  %ag = f32[64,32]{1,0} all-gather(%x), dimensions={0}
+  %ar.1 = bf16[128]{0} all-reduce-start(%y), to_apply=%sum
+  %ar.2 = bf16[128]{0} all-reduce-done(%ar.1)
+  %aa = f32[16,16]{1,0} all-to-all(%z), dimensions={1}
+  %cp = f32[4]{0} collective-permute(%w), source_target_pairs={{0,1}}
+"""
+    got = collective_bytes_from_hlo(hlo)
+    assert got["all-gather"] == 64 * 32 * 4
+    assert got["all-reduce"] == 128 * 2            # start only, not done
+    assert got["all-to-all"] == 16 * 16 * 4
+    assert got["collective-permute"] == 16
+    assert got["_counts"]["all-reduce"] == 1
+
+
+def test_active_params_moe_vs_dense():
+    dense = get_config("yi-9b")
+    moe = get_config("granite-moe-3b-a800m")
+    nd = 8_800_000_000
+    assert active_param_count(dense, nd) == nd        # dense: all active
+    nm = 3_300_000_000
+    act = active_param_count(moe, nm)
+    assert act < 0.45 * nm                            # 8/40 experts active
+
+
+def test_model_flops_train_vs_decode_scaling():
+    cfg = get_config("yi-9b")
+    n = 8_800_000_000
+    tr = model_flops(cfg, SHAPES["train_4k"], n)
+    de = model_flops(cfg, SHAPES["decode_32k"], n)
+    # train: 6·N·(256×4096) tokens; decode: 2·N·128 tokens
+    assert tr / de == pytest.approx(
+        (6 * 256 * 4096) / (2 * 128), rel=0.35)       # lm-head term skews
+
+
+def test_probe_extrapolation_algebra():
+    """The train correction F = O + m(H + Σ L_s C_s) recovers ground truth
+    from synthetic P1/P2/P3 measurements."""
+    O, H, C = 7.0, 11.0, 3.0            # one stack
+    def F(m, L):
+        return O + m * (H + L * C)
+    P1, P2, P3 = F(1, 1), F(1, 2), F(2, 1)
+    C_est = P2 - P1
+    O_est = 2 * P1 - P3
+    per_micro = P1 - O_est
+    m, L = 16, 61
+    corrected = O_est + m * (per_micro + (L - 1) * C_est)
+    assert corrected == pytest.approx(F(m, L))
+
+
+def test_fused_memory_estimate_ordering():
+    """Decode moves far fewer bytes than train; SWA decode beats full-attn
+    decode at the same size class."""
+    yi = get_config("yi-9b")
+    danube = get_config("h2o-danube-3-4b")
+    n_yi, n_da = 8.8e9, 4e9
+    tr = analytic_memory_bytes(yi, SHAPES["train_4k"], n_yi)
+    de = analytic_memory_bytes(yi, SHAPES["decode_32k"], n_yi)
+    assert tr > 10 * de
+    de_swa = analytic_memory_bytes(danube, SHAPES["decode_32k"], n_da)
+    # same-ballpark params, but window cache << 32k full cache
+    assert de_swa < de
+
+
+def test_roofline_terms_use_v5e_constants():
+    assert ROOFLINE_HW["peak_flops"] == 197e12
+    assert ROOFLINE_HW["hbm_bw"] == 819e9
+    assert ROOFLINE_HW["ici_bw"] == 50e9

@@ -1,0 +1,204 @@
+"""Training-substrate tests: optimizer, checkpoints (atomic + elastic),
+compression (error feedback), trainer resume-reproducibility."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.features import fit_normalizer
+from repro.core.model import CostModelConfig
+from repro.core.simulator import TPUSimulator
+from repro.data.sampler import TileBatchSampler
+from repro.data.synthetic import generate_corpus
+from repro.data.tile_dataset import build_tile_dataset
+from repro.training.adafactor import adafactor_init, adafactor_update
+from repro.training.checkpoint import (
+    latest_step,
+    list_steps,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.training.compression import (
+    compress_int8,
+    compressed_allreduce,
+    decompress_int8,
+    zeros_like_error,
+)
+from repro.training.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    schedule_lr,
+)
+from repro.training.trainer import CostModelTrainer, TrainerConfig
+
+
+# ---------------------------------------------------------------- optimizer
+def test_adamw_reduces_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, schedule="constant", grad_clip_norm=None)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_schedules_and_clip():
+    cfg = AdamWConfig(lr=1.0, schedule="exponential", lr_decay=0.5,
+                      decay_every=10, warmup_steps=5)
+    assert float(schedule_lr(cfg, jnp.asarray(0))) == pytest.approx(0.0)
+    assert float(schedule_lr(cfg, jnp.asarray(10))) == pytest.approx(0.5)
+    tree = {"a": jnp.ones((4,)) * 3.0}
+    clipped, gn = clip_by_global_norm(tree, 1.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    assert float(gn) == pytest.approx(6.0)
+
+
+def test_adafactor_reduces_quadratic_and_memory_shape():
+    params = {"w": jnp.ones((8, 16)) * 3.0, "b": jnp.ones((16,))}
+    state = adafactor_init(params)
+    # factored state is O(n+m), not O(nm)
+    assert state["factored"]["w"]["v_row"].shape == (8,)
+    assert state["factored"]["w"]["v_col"].shape == (16,)
+    for _ in range(300):
+        grads = jax.tree_util.tree_map(lambda p: 2 * p, params)
+        params, state, _ = adafactor_update(params, grads, state, lr=0.05)
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+# -------------------------------------------------------------- checkpoints
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    d = str(tmp_path / "ck")
+    state = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+             "step": jnp.asarray(3)}
+    for s in (1, 2, 3, 4):
+        save_checkpoint(d, s, state, keep=2)
+    assert list_steps(d) == [3, 4]
+    restored, step, meta = restore_checkpoint(d, state)
+    assert step == 4
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+
+
+def test_checkpoint_atomicity_ignores_partial(tmp_path):
+    d = str(tmp_path / "ck")
+    state = {"w": jnp.ones((2,))}
+    save_checkpoint(d, 1, state)
+    # simulate a crashed writer: partial dir without manifest
+    os.makedirs(os.path.join(d, "step_00000002"))
+    assert latest_step(d) == 1
+    restored, step, _ = restore_checkpoint(d, state)
+    assert step == 1
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 1, {"w": jnp.ones((2,))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(d, {"w": jnp.ones((3,))})
+
+
+def test_checkpoint_elastic_restore_with_shardings(tmp_path):
+    """Restore onto explicit (single-device) shardings — the elastic path."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    d = str(tmp_path / "ck")
+    state = {"w": jnp.arange(8.0).reshape(2, 4)}
+    save_checkpoint(d, 5, state)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    sh = {"w": NamedSharding(mesh, P())}
+    restored, step, _ = restore_checkpoint(d, state, shardings=sh)
+    assert restored["w"].sharding == sh["w"]
+
+
+# -------------------------------------------------------------- compression
+@given(st.lists(st.floats(min_value=-10, max_value=10), min_size=1,
+                max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_int8_quantization_error_bound(values):
+    g = jnp.asarray(values, jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g)) / 127.0, 1e-12)
+    q, err = compress_int8(g, scale)
+    assert q.dtype == jnp.int8
+    # error bounded by half a quantization step
+    assert float(jnp.max(jnp.abs(err))) <= float(scale) * 0.5 + 1e-6
+    np.testing.assert_allclose(np.asarray(decompress_int8(q, scale) + err),
+                               np.asarray(g), rtol=1e-5, atol=1e-6)
+
+
+def test_compressed_allreduce_error_feedback_converges():
+    """With error feedback, the *accumulated* compressed gradient sum tracks
+    the true sum (bias-free over time)."""
+    g = jnp.asarray([0.001, -0.0005, 1.0])   # small entries vanish per-step
+    ef = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    for _ in range(200):
+        red, ef = compressed_allreduce({"g": g}, {"g": ef}, None)
+        acc = acc + red["g"]
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(g * 200),
+                               rtol=0.02, atol=1e-3)
+
+
+# -------------------------------------------------------------- trainer
+def _tiny_setup(tmp_path, steps=12, compress=False):
+    progs = generate_corpus(6, seed=0)
+    tds = build_tile_dataset(progs, TPUSimulator(), max_configs_per_kernel=6)
+    from repro.data.tile_dataset import fit_tile_normalizer
+    norm = fit_tile_normalizer(tds.records)
+    sampler = TileBatchSampler(tds.records, norm, kernels_per_batch=2,
+                               configs_per_kernel=4, max_nodes=48)
+    mc = CostModelConfig(hidden_dim=32, opcode_embed_dim=8, max_nodes=48,
+                         reduction="per_node", gnn_layers=1,
+                         node_final_layers=1)
+    tc = TrainerConfig(task="tile", steps=steps, ckpt_every=5, log_every=5,
+                       ckpt_dir=str(tmp_path / "ck"),
+                       compress_grads=compress,
+                       optim=AdamWConfig(lr=3e-3))
+    return mc, tc, sampler
+
+
+def test_trainer_loss_decreases(tmp_path):
+    mc, tc, sampler = _tiny_setup(tmp_path, steps=40)
+    tc.ckpt_dir = ""
+    tr = CostModelTrainer(mc, tc, sampler)
+    first = None
+    losses = []
+    for ckpt in range(4):
+        res = tr.run((ckpt + 1) * 10, resume=False)
+        losses.append(res["loss"])
+    assert losses[-1] < losses[0]
+
+
+def test_trainer_resume_exact_reproduction(tmp_path):
+    """Train 12 straight vs train 6 + restart + 6 — identical params
+    (deterministic sampler + checkpointed optimizer state)."""
+    mc, tc, sampler = _tiny_setup(tmp_path, steps=12)
+    tr1 = CostModelTrainer(mc, tc, sampler)
+    tr1.run(12, resume=False)
+    w1 = jax.tree_util.tree_leaves(tr1.params)[0]
+
+    tc2 = TrainerConfig(**{**tc.__dict__,
+                           "ckpt_dir": str(tmp_path / "ck2")})
+    tr2 = CostModelTrainer(mc, tc2, sampler)
+    tr2.run(6, resume=False)
+    del tr2
+    tr3 = CostModelTrainer(mc, tc2, sampler)   # fresh process stand-in
+    assert tr3.maybe_resume()
+    assert tr3.step == 6                       # resumed from the checkpoint
+    tr3.run(12, resume=False)
+    w3 = jax.tree_util.tree_leaves(tr3.params)[0]
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w3), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_trainer_compressed_path_runs(tmp_path):
+    mc, tc, sampler = _tiny_setup(tmp_path, steps=6, compress=True)
+    tc.ckpt_dir = ""
+    tr = CostModelTrainer(mc, tc, sampler)
+    res = tr.run(6, resume=False)
+    assert np.isfinite(res["loss"])
