@@ -1,0 +1,195 @@
+"""Dense-padded vs sparse-packed batching throughput (DESIGN.md §4).
+
+Mixed-size synthetic corpus (8–256 node kernels, log-uniform sizes — the
+TpuGraphs-style regime where a few big graphs force huge padding on many
+small ones). Measures:
+
+  * train-step throughput (graphs/sec, fusion-task log-MSE objective),
+  * inference throughput (graphs/sec, deterministic forward),
+  * numerical agreement of per-graph predictions between the two paths.
+
+Dense pads every kernel to [N_max, N_max] adjacency slots; sparse packs
+kernels into flat node/edge buffers of ~NODE_BUDGET total nodes with
+pow2-bucketed capacities (one compiled executable per bucket).
+
+  PYTHONPATH=src python benchmarks/bench_batching.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from functools import partial
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import features as F
+from repro.core.losses import log_mse_loss
+from repro.core.model import CostModelConfig, cost_model_apply, \
+    cost_model_init
+from repro.data.batching import iter_packed_batches
+from repro.data.synthetic import random_kernel
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update
+
+SCALE = float(os.environ.get("BENCH_SCALE", "1.0"))
+NUM_GRAPHS = max(int(96 * SCALE), 32)
+MIN_NODES, MAX_NODES = 8, 256
+DENSE_BATCH = 16
+NODE_BUDGET = 1024          # sparse pack size (total real nodes per batch)
+EPOCHS = max(int(3 * SCALE), 2)
+
+
+def build_corpus(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    sizes = np.unique(np.round(np.exp(rng.uniform(
+        np.log(MIN_NODES), np.log(MAX_NODES), NUM_GRAPHS))).astype(int))
+    sizes = np.concatenate([sizes, rng.choice(
+        sizes, NUM_GRAPHS - len(sizes))])          # re-use sizes to fill up
+    graphs = [random_kernel(int(n), seed=i) for i, n in enumerate(sizes)]
+    # deterministic runtime proxy so the regression target is meaningful
+    targets = np.array([g.total_flops() / 8e13 + g.bytes_written() / 8e11
+                        + 1e-6 for g in graphs], np.float32)
+    return graphs, targets
+
+
+def model_cfg() -> CostModelConfig:
+    return CostModelConfig(gnn="graphsage", reduction="column_wise",
+                           hidden_dim=64, opcode_embed_dim=16,
+                           max_nodes=MAX_NODES, dropout=0.0)
+
+
+def make_train_step(cfg: CostModelConfig, opt_cfg: AdamWConfig):
+    def loss_fn(params, batch, targets, valid):
+        preds = cost_model_apply(params, cfg, batch)
+        return log_mse_loss(preds, targets, valid)
+
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def step(params, opt_state, batch, targets, valid):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch, targets,
+                                                  valid)
+        params, opt_state, _ = adamw_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, loss
+    return step
+
+
+def dense_batches(graphs, targets, normalizer):
+    out = []
+    for i in range(0, len(graphs), DENSE_BATCH):
+        part = graphs[i:i + DENSE_BATCH]
+        pad = DENSE_BATCH - len(part)
+        enc = F.encode_batch(part + [part[-1]] * pad, MAX_NODES, normalizer)
+        t = np.concatenate([targets[i:i + DENSE_BATCH],
+                            np.full((pad,), 1.0, np.float32)])
+        v = np.concatenate([np.ones((len(part),), np.float32),
+                            np.zeros((pad,), np.float32)])
+        out.append((enc, jnp.asarray(t), jnp.asarray(v), len(part)))
+    return out
+
+
+def sparse_batches(graphs, targets, normalizer):
+    out = []
+    for enc, idx in iter_packed_batches(graphs, NODE_BUDGET, normalizer):
+        G = enc.batch_size
+        t = np.full((G,), 1.0, np.float32)
+        t[:len(idx)] = targets[idx]
+        v = np.asarray(enc.graph_mask, np.float32)
+        out.append((enc, jnp.asarray(t), jnp.asarray(v), len(idx)))
+    return out
+
+
+def time_train(batches, cfg, label):
+    params = cost_model_init(jax.random.key(0), cfg)
+    opt_cfg = AdamWConfig(lr=1e-3)
+    opt_state = adamw_init(params)
+    step = make_train_step(cfg, opt_cfg)
+    # warmup epoch: compiles every bucket shape
+    for enc, t, v, _ in batches:
+        params, opt_state, loss = step(params, opt_state, enc, t, v)
+    jax.block_until_ready(loss)
+    n_graphs = sum(b[3] for b in batches)
+    t0 = time.perf_counter()
+    for _ in range(EPOCHS):
+        for enc, t, v, _ in batches:
+            params, opt_state, loss = step(params, opt_state, enc, t, v)
+    jax.block_until_ready(loss)
+    dt = time.perf_counter() - t0
+    tput = EPOCHS * n_graphs / dt
+    print(f"  train    {label:14s} {tput:8.1f} graphs/s  "
+          f"({len(batches)} batches/epoch, {dt:.2f}s)")
+    return tput
+
+
+def time_infer(batches, cfg, params, label):
+    @jax.jit
+    def fwd(params, batch):
+        return cost_model_apply(params, cfg, batch)
+
+    for enc, *_ in batches:
+        preds = fwd(params, enc)
+    jax.block_until_ready(preds)
+    n_graphs = sum(b[3] for b in batches)
+    reps = EPOCHS * 4
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for enc, *_ in batches:
+            preds = fwd(params, enc)
+    jax.block_until_ready(preds)
+    dt = time.perf_counter() - t0
+    tput = reps * n_graphs / dt
+    print(f"  infer    {label:14s} {tput:8.1f} graphs/s")
+    return tput
+
+
+def main():
+    graphs, targets = build_corpus()
+    normalizer = F.fit_normalizer(graphs)
+    cfg = model_cfg()
+    print(f"bench_batching: {len(graphs)} kernels, "
+          f"{MIN_NODES}-{MAX_NODES} nodes, dense B={DENSE_BATCH} "
+          f"N={MAX_NODES}, sparse node_budget={NODE_BUDGET}")
+
+    db = dense_batches(graphs, targets, normalizer)
+    sb = sparse_batches(graphs, targets, normalizer)
+    total_dense_nodes = len(db) * DENSE_BATCH * MAX_NODES
+    total_sparse_nodes = sum(b[0].num_nodes for b in sb)
+    print(f"  padded node footprint: dense {total_dense_nodes}, "
+          f"sparse {total_sparse_nodes} "
+          f"({total_dense_nodes / total_sparse_nodes:.1f}x smaller)")
+
+    # --- numerical agreement (shared params, deterministic forward)
+    params = cost_model_init(jax.random.key(0), cfg)
+    pred_dense = np.concatenate(
+        [np.asarray(cost_model_apply(params, cfg, enc))[:n]
+         for enc, _, _, n in db])
+    pred_sparse = np.zeros_like(pred_dense)
+    off = 0
+    for enc, idx in iter_packed_batches(graphs, NODE_BUDGET, normalizer):
+        p = np.asarray(cost_model_apply(params, cfg, enc))
+        pred_sparse[idx] = p[:len(idx)]
+    err = float(np.max(np.abs(pred_dense - pred_sparse)))
+    agree = err < 1e-4
+    print(f"  dense-vs-sparse prediction max |Δ| = {err:.2e} "
+          f"({'OK' if agree else 'MISMATCH'})")
+
+    t_dense = time_train(db, cfg, "dense-padded")
+    t_sparse = time_train(sb, cfg, "sparse-packed")
+    i_dense = time_infer(db, cfg, params, "dense-padded")
+    i_sparse = time_infer(sb, cfg, params, "sparse-packed")
+
+    train_speedup = t_sparse / t_dense
+    infer_speedup = i_sparse / i_dense
+    print(f"  speedup: train {train_speedup:.2f}x, infer "
+          f"{infer_speedup:.2f}x")
+    ok = agree and train_speedup >= 2.0
+    print(f"bench_batching: {'PASS' if ok else 'FAIL'} "
+          f"(need >=2x train speedup and <1e-4 prediction delta)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

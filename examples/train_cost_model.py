@@ -4,6 +4,13 @@ the assigned architectures, train/val/test splits, checkpointing + resume,
 JSONL metrics, periodic eval — then hand the model to both autotuners.
 
   PYTHONPATH=src python examples/train_cost_model.py [--steps 600]
+      [--adjacency dense|sparse]
+
+--adjacency selects the batched-graph representation end-to-end (sampler,
+trainer, evaluation, autotuner): 'dense' pads each kernel to a [N, N]
+adjacency slot; 'sparse' packs kernels into bucketed flat node/edge buffers
+(segment-sum aggregation — same numerics, much higher throughput on
+mixed-size corpora; see DESIGN.md §4 and benchmarks/bench_batching.py).
 """
 import argparse
 import os
@@ -11,14 +18,11 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
-
-from repro.autotuner import simulated_annealing_fusion
+from repro.autotuner import model_cost_fn, simulated_annealing_fusion
 from repro.core.evaluate import (
     eval_fusion_task,
     learned_runtime_predictor,
     make_predict_fn,
-    predict_kernels,
 )
 from repro.core.features import fit_normalizer
 from repro.core.hlo_import import import_arch_program
@@ -38,6 +42,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=600)
     ap.add_argument("--ckpt-dir", default="ckpts/fusion_model")
+    ap.add_argument("--adjacency", choices=("dense", "sparse"),
+                    default="dense")
     args = ap.parse_args()
 
     # ---- data: synthetic families + imported architectures
@@ -56,9 +62,9 @@ def main():
     # ---- model + trainer (checkpointed; rerun to resume)
     mc = CostModelConfig(gnn="graphsage", reduction="transformer",
                          hidden_dim=64, opcode_embed_dim=16,
-                         max_nodes=MAX_NODES)
+                         max_nodes=MAX_NODES, adjacency=args.adjacency)
     sampler = BalancedSampler(train_recs, norm, batch_size=24,
-                              max_nodes=MAX_NODES)
+                              max_nodes=MAX_NODES, adjacency=mc.adjacency)
 
     def eval_fn(params, step):
         pred = learned_runtime_predictor(params, mc, norm,
@@ -83,16 +89,11 @@ def main():
           f"Kendall {ev['test_kendall']:.3f}")
 
     # ---- hand the model to the fusion autotuner on a held-out program
-    predict_fn = make_predict_fn(mc)
-
-    def model_cost(kernels):
-        kernels = [k for k in kernels if k.num_nodes <= MAX_NODES]
-        if not kernels:
-            return 0.0
-        s = predict_kernels(trainer.params, mc, kernels, norm,
-                            max_nodes=MAX_NODES, chunk=32,
-                            predict_fn=predict_fn)
-        return float(np.sum(np.exp(s)))
+    # (representation follows mc.adjacency: sparse scores every candidate
+    # kernel; dense drops kernels above MAX_NODES)
+    model_cost = model_cost_fn(trainer.params, mc, norm,
+                               max_nodes=MAX_NODES, chunk=32,
+                               predict_fn=make_predict_fn(mc))
 
     by_name = {p.program: p for p in programs}
     target = by_name[split["test"][0]]

@@ -10,14 +10,17 @@
 from repro.autotuner.tile_autotuner import (
     TileTuneResult,
     autotune_program_tiles,
+    model_scorer,
     tune_kernel_tiles,
 )
 from repro.autotuner.fusion_autotuner import (
     FusionSearchResult,
+    model_cost_fn,
     simulated_annealing_fusion,
 )
 
 __all__ = [
-    "TileTuneResult", "autotune_program_tiles", "tune_kernel_tiles",
-    "FusionSearchResult", "simulated_annealing_fusion",
+    "TileTuneResult", "autotune_program_tiles", "model_scorer",
+    "tune_kernel_tiles",
+    "FusionSearchResult", "model_cost_fn", "simulated_annealing_fusion",
 ]

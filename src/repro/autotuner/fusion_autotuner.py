@@ -32,6 +32,33 @@ from repro.data.fusion import (
 CostFn = Callable[[Sequence[KernelGraph]], float]
 
 
+def model_cost_fn(params, model_cfg, normalizer, *, max_nodes: int = 64,
+                  chunk: int = 128, node_budget: int | None = None,
+                  predict_fn=None) -> CostFn:
+    """Program cost under the learned model: Σ exp(predicted log-runtime).
+
+    Representation follows `model_cfg.adjacency`. The dense path must drop
+    kernels above `max_nodes` (its padded slots truncate them anyway); the
+    sparse path scores every kernel — packed candidate batches have no
+    per-graph cap, which also removes a systematic bias of the dense
+    annealer objective on large fusion groups.
+    """
+    from repro.core.evaluate import make_predict_fn, predict_kernels
+
+    predict = predict_fn or make_predict_fn(model_cfg)
+
+    def cost(kernels: Sequence[KernelGraph]) -> float:
+        if model_cfg.adjacency == "dense":
+            kernels = [k for k in kernels if k.num_nodes <= max_nodes]
+        if not kernels:
+            return 0.0
+        s = predict_kernels(params, model_cfg, kernels, normalizer,
+                            max_nodes=max_nodes, chunk=chunk,
+                            predict_fn=predict, node_budget=node_budget)
+        return float(np.sum(np.exp(s)))
+    return cost
+
+
 @dataclass
 class FusionSearchResult:
     best_decision: FusionDecision

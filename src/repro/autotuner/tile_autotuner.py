@@ -25,6 +25,19 @@ from repro.data.tile_dataset import enumerate_tiles
 Scorer = Callable[[KernelGraph, Sequence[tuple[int, ...]]], np.ndarray]
 
 
+def model_scorer(params, model_cfg, normalizer, *, max_nodes: int = 64,
+                 chunk: int = 128, node_budget: int | None = None) -> Scorer:
+    """Learned-model scorer for `tune_kernel_tiles`. The batched-graph
+    representation follows `model_cfg.adjacency`: 'sparse' packs the tile
+    candidates (all sharing one kernel graph) into bucketed flat batches —
+    markedly higher scoring throughput on big candidate sets — while
+    'dense' keeps the padded [B, N, N] layout."""
+    from repro.core.evaluate import learned_tile_scorer
+    return learned_tile_scorer(params, model_cfg, normalizer,
+                               max_nodes=max_nodes, chunk=chunk,
+                               node_budget=node_budget)
+
+
 @dataclass
 class TileTuneResult:
     kernel_name: str

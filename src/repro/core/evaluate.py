@@ -30,12 +30,32 @@ def make_predict_fn(model_cfg: CostModelConfig):
 
 def predict_kernels(params, model_cfg: CostModelConfig, graphs, normalizer,
                     *, max_nodes: int = 64, chunk: int = 128,
-                    predict_fn=None) -> np.ndarray:
-    """Predict scores for a list of KernelGraphs (padded batched inference).
+                    predict_fn=None, adjacency: str | None = None,
+                    node_budget: int | None = None) -> np.ndarray:
+    """Predict scores for a list of KernelGraphs (batched inference).
 
-    Pads the last chunk to `chunk` so every call hits one compiled shape.
+    dense  — fixed-size chunks padded to `chunk` graphs × `max_nodes` nodes,
+             so every call hits one compiled shape.
+    sparse — kernels packed into flat buffers of ≤ `node_budget` total nodes
+             (default 8 × max_nodes) with pow2-bucketed capacities, so an
+             arbitrary corpus runs through a handful of compiled shapes and
+             small kernels never pay big kernels' padding.
+
+    `adjacency` defaults to `model_cfg.adjacency`.
     """
+    if adjacency is None:
+        adjacency = model_cfg.adjacency
     predict = predict_fn or make_predict_fn(model_cfg)
+    if not len(graphs):
+        return np.zeros((0,), np.float32)
+    if adjacency == "sparse":
+        from repro.data.batching import iter_packed_batches
+        budget = node_budget or 8 * max_nodes
+        out = np.zeros((len(graphs),), np.float32)
+        for enc, idx in iter_packed_batches(graphs, budget, normalizer):
+            preds = np.asarray(predict(params, enc))
+            out[idx] = preds[:len(idx)]
+        return out
     out = []
     for i in range(0, len(graphs), chunk):
         part = graphs[i:i + chunk]
@@ -43,7 +63,7 @@ def predict_kernels(params, model_cfg: CostModelConfig, graphs, normalizer,
         enc = F.encode_batch(part + [part[-1]] * pad, max_nodes, normalizer)
         preds = np.asarray(predict(params, enc))
         out.append(preds[:len(part)])
-    return np.concatenate(out) if out else np.zeros((0,))
+    return np.concatenate(out) if out else np.zeros((0,), np.float32)
 
 
 # ----------------------------------------------------------------------------
@@ -63,14 +83,15 @@ def eval_tile_program(records, scorer) -> dict:
 
 
 def learned_tile_scorer(params, model_cfg, normalizer, *, max_nodes=64,
-                        chunk=128):
+                        chunk=128, adjacency=None, node_budget=None):
     predict = make_predict_fn(model_cfg)
 
     def scorer(kernel, tiles):
         graphs = [kernel.with_tile(t) for t in tiles]
         return predict_kernels(params, model_cfg, graphs, normalizer,
                                max_nodes=max_nodes, chunk=chunk,
-                               predict_fn=predict)
+                               predict_fn=predict, adjacency=adjacency,
+                               node_budget=node_budget)
     return scorer
 
 
@@ -127,14 +148,16 @@ def eval_fusion_task(dataset, predict_runtimes, *,
 
 
 def learned_runtime_predictor(params, model_cfg, normalizer, *,
-                              max_nodes=64, chunk=128):
+                              max_nodes=64, chunk=128, adjacency=None,
+                              node_budget=None):
     """Fusion-task model predicts log-runtime; exponentiate."""
     predict = make_predict_fn(model_cfg)
 
     def predict_runtimes(kernels):
         scores = predict_kernels(params, model_cfg, kernels, normalizer,
                                  max_nodes=max_nodes, chunk=chunk,
-                                 predict_fn=predict)
+                                 predict_fn=predict, adjacency=adjacency,
+                                 node_budget=node_budget)
         return np.exp(scores)
     return predict_runtimes
 

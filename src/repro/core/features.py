@@ -216,6 +216,143 @@ def encode_graph(g: KernelGraph, n_max: int,
     }
 
 
+# ----------------------------------------------------------------------------
+# Sparse packed encoding (DESIGN.md §4)
+# ----------------------------------------------------------------------------
+@dataclass
+class SparseGraphBatch:
+    """Packed sparse batch: every graph's nodes live in one flat node buffer
+    and every edge in one flat edge list, so memory and aggregation cost are
+    linear in Σ nodes / Σ edges instead of quadratic in the padded per-graph
+    node count (contrast `GraphBatch`; see DESIGN.md §4).
+
+    Padding conventions (all jit-safe, no dynamic shapes):
+      * padding nodes: `node_mask == 0`, `graph_ids == 0` — their
+        contributions are always multiplied by the mask before segment ops;
+      * padding edges: `edge_mask == 0`, endpoints point at node 0;
+      * `gather_idx[g, r]` maps (graph slot, node position) to a flat node
+        index for the sequence reductions (LSTM/Transformer); padding
+        positions hold the sentinel `num_nodes`, resolved against a zero row
+        appended at apply time;
+      * padding graph slots: `graph_mask == 0` — their predictions are
+        garbage by construction and must be dropped via `valid`/`graph_mask`.
+    """
+    opcodes: np.ndarray        # [M] int32
+    node_feats: np.ndarray     # [M, F_node] float32
+    node_mask: np.ndarray      # [M] float32
+    graph_ids: np.ndarray      # [M] int32 — graph slot per node
+    edge_src: np.ndarray       # [E] int32
+    edge_dst: np.ndarray       # [E] int32
+    edge_mask: np.ndarray      # [E] float32
+    kernel_feats: np.ndarray   # [G, F_kernel] float32
+    graph_mask: np.ndarray     # [G] float32
+    gather_idx: np.ndarray     # [G, R] int32
+    gather_mask: np.ndarray    # [G, R] float32
+
+    @property
+    def batch_size(self) -> int:       # graph slots (mirrors GraphBatch API)
+        return self.kernel_feats.shape[0]
+
+    @property
+    def num_nodes(self) -> int:
+        return self.opcodes.shape[0]
+
+    @property
+    def num_edges(self) -> int:
+        return self.edge_src.shape[0]
+
+    @property
+    def reduce_capacity(self) -> int:
+        return self.gather_idx.shape[1]
+
+
+def _sparsebatch_flatten(b: SparseGraphBatch):
+    return ((b.opcodes, b.node_feats, b.node_mask, b.graph_ids,
+             b.edge_src, b.edge_dst, b.edge_mask, b.kernel_feats,
+             b.graph_mask, b.gather_idx, b.gather_mask), None)
+
+
+def _sparsebatch_unflatten(_, children):
+    return SparseGraphBatch(*children)
+
+
+_jtu.register_pytree_node(SparseGraphBatch, _sparsebatch_flatten,
+                          _sparsebatch_unflatten)
+
+
+def encode_sparse_batch(graphs: Sequence[KernelGraph],
+                        normalizer: FeatureNormalizer | None = None,
+                        *, include_static_perf: bool = True,
+                        node_capacity: int | None = None,
+                        edge_capacity: int | None = None,
+                        graph_capacity: int | None = None,
+                        reduce_capacity: int | None = None
+                        ) -> SparseGraphBatch:
+    """Pack `graphs` (in order — slot g holds graphs[g]) into one
+    SparseGraphBatch. Capacities default to the exact required sizes; the
+    bucketing batcher in `repro.data.batching` passes rounded-up capacities
+    so jit compiles one executable per bucket.
+    """
+    if not graphs:
+        raise ValueError("empty graph list")
+    n_real = sum(g.num_nodes for g in graphs)
+    e_real = sum(len(g.unique_edges()) for g in graphs)
+    r_real = max(g.num_nodes for g in graphs)
+    M = node_capacity if node_capacity is not None else n_real
+    E = max(edge_capacity if edge_capacity is not None else e_real, 1)
+    G = graph_capacity if graph_capacity is not None else len(graphs)
+    R = reduce_capacity if reduce_capacity is not None else r_real
+    if M < n_real:
+        raise ValueError(f"node_capacity {M} < total nodes {n_real}")
+    if E < e_real:
+        raise ValueError(f"edge_capacity {E} < total edges {e_real}")
+    if G < len(graphs):
+        raise ValueError(f"graph_capacity {G} < num graphs {len(graphs)}")
+    if R < r_real:
+        raise ValueError(f"reduce_capacity {R} < max graph size {r_real}")
+
+    opcodes = np.zeros((M,), np.int32)
+    nf = np.zeros((M, NODE_FEATURE_DIM), np.float32)
+    node_mask = np.zeros((M,), np.float32)
+    graph_ids = np.zeros((M,), np.int32)
+    edge_src = np.zeros((E,), np.int32)
+    edge_dst = np.zeros((E,), np.int32)
+    edge_mask = np.zeros((E,), np.float32)
+    kf = np.zeros((G, KERNEL_FEATURE_DIM), np.float32)
+    graph_mask = np.zeros((G,), np.float32)
+    gather_idx = np.full((G, R), M, np.int32)      # sentinel = zero row
+    gather_mask = np.zeros((G, R), np.float32)
+
+    n_off = e_off = 0
+    for gi, g in enumerate(graphs):
+        n = g.num_nodes
+        opcodes[n_off:n_off + n] = opcode_ids(g)
+        nf_raw = node_features(g)
+        kf_raw = kernel_features(g, include_static_perf=include_static_perf)
+        if normalizer is not None:
+            nf_raw = normalizer.transform_node(nf_raw)
+            kf_raw = normalizer.transform_kernel(kf_raw)
+        nf[n_off:n_off + n] = nf_raw
+        node_mask[n_off:n_off + n] = 1.0
+        graph_ids[n_off:n_off + n] = gi
+        kf[gi] = kf_raw
+        graph_mask[gi] = 1.0
+        gather_idx[gi, :n] = np.arange(n_off, n_off + n, dtype=np.int32)
+        gather_mask[gi, :n] = 1.0
+        edges = g.unique_edges()
+        if edges:
+            arr = np.asarray(edges, np.int32)
+            k = len(edges)
+            edge_src[e_off:e_off + k] = arr[:, 0] + n_off
+            edge_dst[e_off:e_off + k] = arr[:, 1] + n_off
+            edge_mask[e_off:e_off + k] = 1.0
+            e_off += k
+        n_off += n
+    return SparseGraphBatch(opcodes, nf, node_mask, graph_ids,
+                            edge_src, edge_dst, edge_mask, kf, graph_mask,
+                            gather_idx, gather_mask)
+
+
 def encode_batch(graphs: Sequence[KernelGraph], n_max: int,
                  normalizer: FeatureNormalizer | None = None,
                  *, include_static_perf: bool = True) -> GraphBatch:

@@ -4,10 +4,15 @@ GraphSAGE (the paper's choice) and GAT (the ablation alternative), both
 direction-aware: incoming and outgoing edges aggregate through separate
 feedforward modules ('Undirected' ablation shares them).
 
-Aggregation is a dense masked-adjacency matmul — `adj[b, d, s] @ h[b, s, :]`
-— which is the TPU-native formulation (MXU-friendly; see DESIGN.md §3).
-`repro.kernels.graph_aggregate` provides the fused Pallas version; this file
-is the jnp reference path used for training on CPU and as the kernel oracle.
+Two numerically equivalent aggregation backends share one parameter tree:
+
+* dense — a masked-adjacency matmul `adj[b, d, s] @ h[b, s, :]`, the
+  TPU-native formulation (MXU-friendly; see DESIGN.md §3).
+  `repro.kernels.graph_aggregate` provides the fused Pallas version; the
+  jnp path here is used for training on CPU and as the kernel oracle.
+* sparse — `jax.ops.segment_sum` over a packed edge list
+  (`*_apply_sparse`), linear in edge count instead of quadratic in the
+  padded node count; used with `features.SparseGraphBatch` (DESIGN.md §4).
 """
 from __future__ import annotations
 
@@ -121,6 +126,70 @@ def sage_apply(params: dict, eps: jnp.ndarray, adj: jnp.ndarray,
 
 
 # ----------------------------------------------------------------------------
+# Sparse (segment-sum) backend — flat [M, D] node buffer + packed edge list
+# ----------------------------------------------------------------------------
+def _segment_aggregate(msg: jnp.ndarray, gather: jnp.ndarray,
+                       scatter: jnp.ndarray, edge_mask: jnp.ndarray,
+                       node_mask: jnp.ndarray, aggregator: str) -> jnp.ndarray:
+    """Aggregate per-node messages along edges.
+
+    msg: [M, D]; gather/scatter: [E] flat node indices (message taken at
+    `gather`, summed into `scatter`); returns [M, D]. With gather=src,
+    scatter=dst this is in-edge aggregation (== dense `adj @ h`); swapped,
+    out-edge aggregation (== dense `adjᵀ @ h`).
+    """
+    m = msg * node_mask[:, None]
+    w = edge_mask[:, None]
+    agg = jax.ops.segment_sum(m[gather] * w, scatter,
+                              num_segments=msg.shape[0])
+    if aggregator == "mean":
+        deg = jax.ops.segment_sum(edge_mask, scatter,
+                                  num_segments=msg.shape[0])
+        agg = agg / jnp.maximum(deg, 1.0)[:, None]
+    return agg
+
+
+def sage_layer_apply_sparse(params: dict, eps: jnp.ndarray,
+                            edge_src: jnp.ndarray, edge_dst: jnp.ndarray,
+                            edge_mask: jnp.ndarray, node_mask: jnp.ndarray,
+                            *, aggregator: str = "mean",
+                            directed: bool = True) -> jnp.ndarray:
+    """Sparse twin of `sage_layer_apply` over a flat node buffer.
+
+    Takes the same parameter tree; numerically equivalent to the dense path
+    on the same graphs (tests/test_sparse_batching.py pins this).
+    """
+    msg_in = jax.nn.relu(dense_apply(params["f2_in"], eps))
+    agg_in = _segment_aggregate(msg_in, edge_src, edge_dst, edge_mask,
+                                node_mask, aggregator)
+    parts = [eps, agg_in]
+    if directed:
+        msg_out = jax.nn.relu(dense_apply(params["f2_out"], eps))
+        agg_out = _segment_aggregate(msg_out, edge_dst, edge_src, edge_mask,
+                                     node_mask, aggregator)
+        parts.append(agg_out)
+    else:
+        agg_out = _segment_aggregate(msg_in, edge_dst, edge_src, edge_mask,
+                                     node_mask, aggregator)
+        parts[1] = 0.5 * (agg_in + agg_out)
+    h = dense_apply(params["f3"], jnp.concatenate(parts, axis=-1))
+    h = jax.nn.relu(h)
+    return l2_normalize(h, axis=-1) * node_mask[:, None]
+
+
+def sage_apply_sparse(params: dict, eps: jnp.ndarray, edge_src: jnp.ndarray,
+                      edge_dst: jnp.ndarray, edge_mask: jnp.ndarray,
+                      node_mask: jnp.ndarray, *, aggregator: str = "mean",
+                      directed: bool = True) -> jnp.ndarray:
+    for layer in params["layers"]:
+        eps = sage_layer_apply_sparse(layer, eps, edge_src, edge_dst,
+                                      edge_mask, node_mask,
+                                      aggregator=aggregator,
+                                      directed=directed)
+    return eps
+
+
+# ----------------------------------------------------------------------------
 # GAT
 # ----------------------------------------------------------------------------
 def gat_layer_init(rng, dim: int, num_heads: int, *, directed: bool,
@@ -201,4 +270,68 @@ def gat_apply(params: dict, eps: jnp.ndarray, adj: jnp.ndarray,
     for layer in params["layers"]:
         eps = gat_layer_apply(layer, eps, adj, node_mask, num_heads=num_heads,
                               directed=directed)
+    return eps
+
+
+def _gat_attend_sparse(h: jnp.ndarray, edge_src: jnp.ndarray,
+                       edge_dst: jnp.ndarray, edge_mask: jnp.ndarray,
+                       a_src: jnp.ndarray, a_dst: jnp.ndarray,
+                       num_heads: int) -> jnp.ndarray:
+    """Segment-softmax attention over in-edges: sparse twin of `_gat_attend`.
+
+    h: [M, D]; edges are flat indices into the node buffer. The softmax per
+    (dst, head) segment is max-shifted for stability; destinations with no
+    in-edges get a zero output, matching the dense path's masked softmax.
+    """
+    M, D = h.shape
+    hd = D // num_heads
+    hh = h.reshape(M, num_heads, hd)
+    e_src = jnp.einsum("mhd,hd->mh", hh, a_src)
+    e_dst = jnp.einsum("mhd,hd->mh", hh, a_dst)
+    logits = jax.nn.leaky_relu(e_dst[edge_dst] + e_src[edge_src], 0.2)
+    neg = jnp.finfo(logits.dtype).min
+    z = jnp.where(edge_mask[:, None] > 0, logits, neg)
+    zmax = jax.ops.segment_max(z, edge_dst, num_segments=M)      # [M, H]
+    zmax = jnp.maximum(zmax, neg)            # empty segments: -inf → finite
+    num = jnp.exp(z - zmax[edge_dst]) * edge_mask[:, None]       # [E, H]
+    den = jax.ops.segment_sum(num, edge_dst, num_segments=M)     # [M, H]
+    alpha = num / jnp.maximum(den[edge_dst], 1e-30)
+    out = jax.ops.segment_sum(alpha[:, :, None] * hh[edge_src], edge_dst,
+                              num_segments=M)                    # [M, H, hd]
+    return out.reshape(M, D)
+
+
+def gat_layer_apply_sparse(params: dict, eps: jnp.ndarray,
+                           edge_src: jnp.ndarray, edge_dst: jnp.ndarray,
+                           edge_mask: jnp.ndarray, node_mask: jnp.ndarray,
+                           *, num_heads: int,
+                           directed: bool = True) -> jnp.ndarray:
+    if not directed:
+        # the symmetrized (max(adj, adjᵀ)) edge set can't be deduplicated
+        # under jit with static shapes; the ablation stays on the dense path
+        raise NotImplementedError(
+            "undirected GAT is dense-only; use adjacency='dense' "
+            "(see DESIGN.md §4)")
+    h_in = dense_apply(params["w_in"], eps)
+    agg_in = _gat_attend_sparse(h_in, edge_src, edge_dst, edge_mask,
+                                params["a_src_in"], params["a_dst_in"],
+                                num_heads)
+    h_out = dense_apply(params["w_out"], eps)
+    agg_out = _gat_attend_sparse(h_out, edge_dst, edge_src, edge_mask,
+                                 params["a_src_out"], params["a_dst_out"],
+                                 num_heads)
+    agg = jnp.concatenate([agg_in, agg_out], axis=-1)
+    h = dense_apply(params["proj"], agg)
+    h = jax.nn.elu(h) + eps
+    return h * node_mask[:, None]
+
+
+def gat_apply_sparse(params: dict, eps: jnp.ndarray, edge_src: jnp.ndarray,
+                     edge_dst: jnp.ndarray, edge_mask: jnp.ndarray,
+                     node_mask: jnp.ndarray, *, num_heads: int,
+                     directed: bool = True) -> jnp.ndarray:
+    for layer in params["layers"]:
+        eps = gat_layer_apply_sparse(layer, eps, edge_src, edge_dst,
+                                     edge_mask, node_mask,
+                                     num_heads=num_heads, directed=directed)
     return eps

@@ -120,6 +120,27 @@ class KernelGraph:
                 es.append((s, d))
         return es
 
+    def unique_edges(self) -> list[tuple[int, int]]:
+        """(src, dst) pairs with multi-edges collapsed (a node consuming the
+        same producer twice, e.g. add(x, x), yields one edge) — the same
+        set semantics as the dense `features.adjacency` matrix, which the
+        sparse edge-list encoding must match for numerical equivalence.
+
+        Memoized: the sparse batcher asks for the edge set several times
+        per encode (bucketing + capacity checks + the write loop), every
+        training step.
+        """
+        cached = getattr(self, "_unique_edges", None)
+        if cached is None:
+            seen: set[tuple[int, int]] = set()
+            cached = []
+            for e in self.edges():
+                if e not in seen:
+                    seen.add(e)
+                    cached.append(e)
+            self._unique_edges = cached
+        return cached
+
     def fan_out(self) -> np.ndarray:
         fo = np.zeros((self.num_nodes,), np.int32)
         for d, n in enumerate(self.nodes):
@@ -151,6 +172,9 @@ class KernelGraph:
 
     def with_tile(self, tile: Sequence[int]) -> "KernelGraph":
         g = KernelGraph(self.nodes, self.program, self.name, tuple(int(t) for t in tile))
+        cached = getattr(self, "_unique_edges", None)
+        if cached is not None:       # same nodes ⇒ same edge set
+            g._unique_edges = cached
         return g
 
     def renumbered(self, perm: Sequence[int]) -> "KernelGraph":

@@ -52,6 +52,12 @@ class CostModelConfig:
     dropout: float = 0.1
     max_nodes: int = 64
     use_pallas_aggregate: bool = False   # fused Pallas graph_aggregate path
+    # batched-graph representation the data path should produce for this
+    # model: 'dense' ([B,N,N] padded adjacency, MXU matmul aggregation) or
+    # 'sparse' (packed SparseGraphBatch + segment_sum). `cost_model_apply`
+    # itself dispatches on the batch type; samplers/evaluators/autotuners
+    # read this field to pick the encoder. See DESIGN.md §4.
+    adjacency: str = "dense"             # dense | sparse
 
     def to_dict(self) -> dict:
         return asdict(self)
@@ -103,7 +109,12 @@ def cost_model_init(rng, cfg: CostModelConfig, dtype=jnp.float32) -> dict:
 
 def cost_model_apply(params: dict, cfg: CostModelConfig, batch,
                      *, rng=None, deterministic: bool = True) -> jnp.ndarray:
-    """batch: features.GraphBatch (pytree). Returns predictions [B]."""
+    """batch: features.GraphBatch or features.SparseGraphBatch (pytrees).
+    Returns predictions [B] (one per graph slot). Both representations share
+    one parameter tree and agree numerically (DESIGN.md §4)."""
+    if isinstance(batch, F.SparseGraphBatch):
+        return _cost_model_apply_sparse(params, cfg, batch, rng=rng,
+                                        deterministic=deterministic)
     opcodes = batch.opcodes
     node_feats = batch.node_feats
     adj = batch.adj
@@ -148,6 +159,85 @@ def cost_model_apply(params: dict, cfg: CostModelConfig, batch,
                               transformer_heads=cfg.transformer_heads,
                               rng=rng, dropout_rate=cfg.dropout,
                               deterministic=deterministic)
+    if cfg.kernel_feat_mode == "kernel":
+        kappa = jnp.concatenate([kappa, kfeats], axis=-1)
+    return dense_apply(params["head"], kappa)[..., 0]
+
+
+def _cost_model_apply_sparse(params: dict, cfg: CostModelConfig, batch,
+                             *, rng=None,
+                             deterministic: bool = True) -> jnp.ndarray:
+    """Sparse/packed forward pass: flat [M, ·] node buffer, segment_sum
+    aggregation, per-graph readout via segment ids (or a gather into a
+    [G, R, D] layout for the sequence reductions)."""
+    mask = batch.node_mask                       # [M]
+    gids = batch.graph_ids                       # [M]
+    kfeats = batch.kernel_feats                  # [G, F_kernel]
+    num_graphs = kfeats.shape[0]
+
+    if not cfg.include_tile:
+        kfeats = kfeats.at[:, F.TILE_SLICE].set(0.0)
+    if not cfg.include_static_perf:
+        kfeats = kfeats.at[:, F.STATIC_PERF_SLICE].set(0.0)
+
+    emb = embedding_apply(params["opcode_embed"], batch.opcodes)  # [M, E]
+    x = jnp.concatenate([emb, batch.node_feats], axis=-1)
+    if cfg.kernel_feat_mode == "node":
+        x = jnp.concatenate([x, jnp.take(kfeats, gids, axis=0)], axis=-1)
+
+    eps = jax.nn.relu(dense_apply(params["f1"], x)) * mask[:, None]
+
+    if cfg.gnn == "graphsage":
+        if cfg.use_pallas_aggregate:
+            raise NotImplementedError(
+                "use_pallas_aggregate targets the dense [B,N,N] layout; "
+                "use adjacency='dense' with it")
+        eps = G.sage_apply_sparse(params["gnn"], eps, batch.edge_src,
+                                      batch.edge_dst, batch.edge_mask, mask,
+                                      aggregator=cfg.aggregator,
+                                      directed=cfg.directed)
+    elif cfg.gnn == "gat":
+        eps = G.gat_apply_sparse(params["gnn"], eps, batch.edge_src,
+                                     batch.edge_dst, batch.edge_mask, mask,
+                                     num_heads=cfg.gat_heads,
+                                     directed=cfg.directed)
+
+    sub = None if rng is None else jax.random.fold_in(rng, 1)
+    eps = dropout(sub, eps, cfg.dropout, deterministic)
+    eps = mlp_apply(params["node_final"], eps, final_act=True)
+    eps = eps * mask[:, None]
+
+    if cfg.reduction == "per_node":
+        per_node = dense_apply(params["node_head"], eps)[..., 0]   # [M]
+        y = jax.ops.segment_sum(per_node * mask, gids, num_segments=num_graphs)
+        if cfg.kernel_feat_mode == "kernel":
+            y = y + dense_apply(params["kernel_head"], kfeats)[..., 0]
+        return y
+
+    if cfg.reduction == "column_wise":
+        s = jax.ops.segment_sum(eps * mask[:, None], gids,
+                                num_segments=num_graphs)
+        cnt = jax.ops.segment_sum(mask, gids, num_segments=num_graphs)
+        n = jnp.maximum(cnt, 1.0)
+        neg = jnp.finfo(eps.dtype).min
+        mx = jax.ops.segment_max(jnp.where(mask[:, None] > 0, eps, neg),
+                                 gids, num_segments=num_graphs)
+        # padding graph slots have no nodes; zero them instead of -inf/min
+        # so the head stays finite (their predictions are masked by `valid`)
+        mx = jnp.where(cnt[:, None] > 0, mx, 0.0)
+        kappa = jnp.concatenate([s / n[:, None], mx], axis=-1)
+    else:
+        # sequence reductions (LSTM/Transformer) need per-graph node order;
+        # gather the flat buffer into [G, R, D] (R = packed reduce capacity,
+        # typically ≪ the dense path's max_nodes × slot padding)
+        eps_pad = jnp.concatenate(
+            [eps, jnp.zeros((1, eps.shape[-1]), eps.dtype)], axis=0)
+        seq = jnp.take(eps_pad, batch.gather_idx, axis=0)          # [G, R, D]
+        kappa = R.reduction_apply(params["reduction"], cfg.reduction, seq,
+                                  batch.gather_mask,
+                                  transformer_heads=cfg.transformer_heads,
+                                  rng=rng, dropout_rate=cfg.dropout,
+                                  deterministic=deterministic)
     if cfg.kernel_feat_mode == "kernel":
         kappa = jnp.concatenate([kappa, kfeats], axis=-1)
     return dense_apply(params["head"], kappa)[..., 0]

@@ -7,7 +7,15 @@ from repro.data.fusion import (
     fusable_edges,
     random_fusion,
 )
-from repro.data.synthetic import FAMILIES, generate_corpus, generate_program
+from repro.data.batching import (
+    BucketSpec,
+    bucket_for,
+    encode_packed,
+    iter_packed_batches,
+    pack_graphs,
+)
+from repro.data.synthetic import FAMILIES, generate_corpus, generate_program,\
+    random_kernel
 from repro.data.tile_dataset import enumerate_tiles, build_tile_dataset
 from repro.data.fusion_dataset import build_fusion_dataset
 from repro.data.corpus import split_programs, kernel_hash
@@ -16,6 +24,9 @@ from repro.data.sampler import BalancedSampler, TileBatchSampler
 __all__ = [
     "FusionDecision", "apply_fusion", "default_fusion", "fusable_edges",
     "random_fusion", "FAMILIES", "generate_corpus", "generate_program",
+    "random_kernel",
     "enumerate_tiles", "build_tile_dataset", "build_fusion_dataset",
     "split_programs", "kernel_hash", "BalancedSampler", "TileBatchSampler",
+    "BucketSpec", "bucket_for", "encode_packed", "iter_packed_batches",
+    "pack_graphs",
 ]

@@ -9,20 +9,27 @@
   each step's batch. `ShardPlanner` reassigns shards away from hosts flagged
   as stragglers (deterministically), so a slow host's work is taken over by
   backups without coordination.
+
+Both samplers encode each draw with `adjacency='dense'` (padded GraphBatch,
+truncated at max_nodes) or `adjacency='sparse'` (packed SparseGraphBatch —
+no per-graph padding or truncation; capacities pow2-bucketed so jit sees a
+bounded set of shapes). See DESIGN.md §4.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core import features as F
 from repro.core.features import FeatureNormalizer, GraphBatch, encode_batch
+from repro.data import batching
 
 
 @dataclass
 class TileBatch:
-    graphs: GraphBatch
+    graphs: object           # GraphBatch | SparseGraphBatch
     targets: np.ndarray      # [B] seconds
     group_ids: np.ndarray    # [B] int32 — same kernel => same group
     valid: np.ndarray        # [B] float32
@@ -30,9 +37,31 @@ class TileBatch:
 
 @dataclass
 class FusionBatch:
-    graphs: GraphBatch
+    graphs: object           # GraphBatch | SparseGraphBatch
     targets: np.ndarray      # [B] seconds
     valid: np.ndarray        # [B] float32
+
+
+def _encode(graphs, adjacency: str, max_nodes: int, normalizer):
+    """Encode a drawn graph list with the configured representation.
+
+    dense  — `features.encode_batch`, one padded [N, N] slot per graph.
+    sparse — `batching.encode_packed`, the whole draw packed into one flat
+             node/edge buffer with pow2-bucketed capacities, so only a few
+             shapes reach jit (slot order == draw order, so targets/groups
+             line up unchanged).
+    """
+    if adjacency == "dense":
+        return encode_batch(graphs, max_nodes, normalizer)
+    if adjacency == "sparse":
+        # graph capacity stays EXACT (the per-step draw count is fixed, so
+        # jit still sees one G): padded graph slots would dilute losses
+        # normalized by slot count (pairwise_rank_loss's n(n-1)/2) relative
+        # to an identical dense run
+        spec = dataclasses.replace(batching.bucket_for(graphs),
+                                   graph_capacity=len(graphs))
+        return batching.encode_packed(graphs, normalizer, spec=spec)
+    raise ValueError(f"unknown adjacency {adjacency!r}")
 
 
 class TileBatchSampler:
@@ -41,7 +70,7 @@ class TileBatchSampler:
     def __init__(self, records, normalizer: FeatureNormalizer, *,
                  kernels_per_batch: int = 4, configs_per_kernel: int = 16,
                  max_nodes: int = 64, seed: int = 0, host_id: int = 0,
-                 num_hosts: int = 1):
+                 num_hosts: int = 1, adjacency: str = "dense"):
         if not records:
             raise ValueError("empty tile dataset")
         self.records = records
@@ -52,6 +81,7 @@ class TileBatchSampler:
         self.seed = seed
         self.host_id = host_id
         self.num_hosts = num_hosts
+        self.adjacency = adjacency
         self._by_program: dict[str, list[int]] = {}
         for i, r in enumerate(records):
             self._by_program.setdefault(r.program, []).append(i)
@@ -81,7 +111,7 @@ class TileBatchSampler:
                 targets.append(float(rec.runtimes[0]))
                 groups.append(ki)
                 valid.append(0.0)
-        gb = encode_batch(graphs, self.max_nodes, self.normalizer)
+        gb = _encode(graphs, self.adjacency, self.max_nodes, self.normalizer)
         return TileBatch(gb, np.asarray(targets, np.float32),
                          np.asarray(groups, np.int32),
                          np.asarray(valid, np.float32))
@@ -92,7 +122,8 @@ class BalancedSampler:
 
     def __init__(self, records, normalizer: FeatureNormalizer, *,
                  batch_size: int = 64, max_nodes: int = 64, seed: int = 0,
-                 host_id: int = 0, num_hosts: int = 1):
+                 host_id: int = 0, num_hosts: int = 1,
+                 adjacency: str = "dense"):
         if not records:
             raise ValueError("empty fusion dataset")
         self.records = records
@@ -102,6 +133,7 @@ class BalancedSampler:
         self.seed = seed
         self.host_id = host_id
         self.num_hosts = num_hosts
+        self.adjacency = adjacency
         self._by_program: dict[str, list[int]] = {}
         for i, r in enumerate(records):
             self._by_program.setdefault(r.program, []).append(i)
@@ -116,9 +148,9 @@ class BalancedSampler:
             rec = self.records[int(rng.choice(self._by_program[prog]))]
             graphs.append(rec.kernel)
             targets.append(rec.runtime)
-        gb = encode_batch(graphs, self.max_nodes, self.normalizer)
+        gb = _encode(graphs, self.adjacency, self.max_nodes, self.normalizer)
         return FusionBatch(gb, np.asarray(targets, np.float32),
-                           np.ones((self.batch_size,), np.float32))
+                           np.ones((len(graphs),), np.float32))
 
 
 class ShardPlanner:

@@ -324,3 +324,34 @@ def generate_corpus(num_programs: int = 104, seed: int = 0) -> list[KernelGraph]
                 programs.append(generate_program(fam, idx, seed))
                 idx += 1
     return programs[:num_programs]
+
+
+def random_kernel(num_nodes: int, seed: int = 0, *,
+                  program: str = "random") -> KernelGraph:
+    """A random topologically ordered DAG kernel of exactly `num_nodes`
+    nodes — the mixed-size workload generator for the sparse-batching tests
+    and `benchmarks/bench_batching.py`. Structure mimics fused HLO kernels:
+    a few parameters feeding a soup of unary/binary elementwise ops with
+    occasional dots."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, num_nodes]))
+    b = _Builder(f"{program}_{num_nodes}_{seed}")
+    shape = (_pow2(rng, 8, 64), _pow2(rng, 8, 64))
+    dt = _dtype(rng)
+    n_params = min(max(1, num_nodes // 8), num_nodes)
+    for _ in range(n_params):
+        b.param(shape, dt)
+    unary = [opset.EXP, opset.TANH, opset.NEG, opset.ABS, opset.LOGISTIC]
+    binary = [opset.ADD, opset.MUL, opset.SUB, opset.MAX]
+    while len(b.nodes) < num_nodes:
+        i = len(b.nodes)
+        if i >= 2 and num_nodes - i >= 1 and rng.random() < 0.02:
+            lhs, rhs = rng.integers(i, size=2)
+            k = shape[1]
+            b.add(opset.DOT, shape, (int(lhs), int(rhs)), dt, contract_dim=k)
+        elif i >= 2 and rng.random() < 0.4:
+            lhs, rhs = rng.integers(i, size=2)
+            b.add(rng.choice(binary), shape, (int(lhs), int(rhs)), dt)
+        else:
+            src = int(rng.integers(i))
+            b.add(rng.choice(unary), shape, (src,), dt)
+    return b.build()

@@ -149,6 +149,10 @@ def lower_cell(arch: str, cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
         compiled = lowered.compile()
         mem = compiled.memory_analysis()
         ca = compiled.cost_analysis()
+        # jax < 0.5 returns a one-element list of dicts (per device);
+        # newer jax returns the dict directly
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else None
         cost = dict(ca) if ca else {}
         try:
             hlo = compiled.as_text()

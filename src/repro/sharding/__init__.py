@@ -4,7 +4,9 @@ from repro.sharding.partition import (
     opt_specs,
     param_specs,
 )
-from repro.sharding.context import activation_sharding, constrain, dp_axes
+from repro.sharding.context import activation_sharding, constrain, dp_axes, \
+    shard_map_nocheck
 
 __all__ = ["batch_specs", "cache_specs", "opt_specs", "param_specs",
-           "activation_sharding", "constrain", "dp_axes"]
+           "activation_sharding", "constrain", "dp_axes",
+           "shard_map_nocheck"]

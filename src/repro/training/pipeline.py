@@ -17,7 +17,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from repro.sharding.context import shard_map_nocheck
 
 
 def pipeline_apply(stage_fn, stage_params, x_micro, *, mesh: Mesh,
@@ -57,9 +58,8 @@ def pipeline_apply(stage_fn, stage_params, x_micro, *, mesh: Mesh,
         # broadcast final-stage outputs to all stages for a replicated result
         return jax.lax.psum(outs, axis) if n_stages > 1 else outs
 
-    fn = shard_map(per_device, mesh=mesh,
-                   in_specs=(p_specs, P()), out_specs=P(),
-                   check_vma=False)
+    fn = shard_map_nocheck(per_device, mesh,
+                           in_specs=(p_specs, P()), out_specs=P())
     return fn(stage_params, x_micro)
 
 

@@ -9,6 +9,13 @@ The trainer is deliberately framework-grade rather than script-grade:
   * data parallelism over a named mesh axis; parameters are replicated
     (the model is ~1-10M params — DP is the right parallelism; the LM zoo
     under repro.models exercises TP/FSDP/EP/SP instead).
+
+Batches are whatever the sampler yields: dense `features.GraphBatch` or
+packed `features.SparseGraphBatch` (adjacency='sparse'; DESIGN.md §4). The
+jit step caches one executable per batch shape, so sparse batches must come
+from the pow2-bucketed batcher in `repro.data.batching` to bound
+recompilation. Sparse batches have no uniform leading batch dim, so the
+int8 compressed-DP path (which shards on it) is dense-only.
 """
 from __future__ import annotations
 
@@ -63,6 +70,22 @@ class CostModelTrainer:
         self.step = 0
         self._stop = False
         self._metrics_f = None
+
+        # reject dense-only config combos here rather than as a
+        # NotImplementedError buried in the first step's jit trace
+        if model_cfg.adjacency == "sparse":
+            if cfg.compress_grads:
+                raise ValueError(
+                    "compress_grads shards batches on a leading batch dim; "
+                    "packed sparse batches have none — use adjacency='dense'")
+            if model_cfg.use_pallas_aggregate:
+                raise ValueError(
+                    "use_pallas_aggregate targets the dense [B,N,N] layout "
+                    "— use adjacency='dense' with it")
+            if model_cfg.gnn == "gat" and not model_cfg.directed:
+                raise ValueError(
+                    "undirected GAT is dense-only (DESIGN.md §4) — use "
+                    "adjacency='dense'")
 
         key = jax.random.key(cfg.seed)
         self.params = cost_model_init(key, model_cfg)
@@ -128,17 +151,16 @@ class CostModelTrainer:
                 loss = jax.lax.pmean(loss, axis)
                 return loss, red, new_ef
 
-            from jax import shard_map
+            from repro.sharding.context import shard_map_nocheck
             spec_params = jax.tree_util.tree_map(lambda _: P(), params)
             spec_batch = jax.tree_util.tree_map(
                 lambda x: P(axis) if x.ndim >= 1 else P(), batch)
-            loss, grads, new_ef = shard_map(
-                local, mesh=mesh,
+            loss, grads, new_ef = shard_map_nocheck(
+                local, mesh,
                 in_specs=(spec_params, spec_batch, P(axis), P(axis), P(axis),
                           jax.tree_util.tree_map(lambda _: P(), ef)),
                 out_specs=(P(), jax.tree_util.tree_map(lambda _: P(), params),
                            jax.tree_util.tree_map(lambda _: P(), ef)),
-                check_vma=False,
             )(params, batch, targets, group_ids, valid, ef)
             opt_no_ef = {k: v for k, v in opt_state.items() if k != "ef"}
             new_params, new_opt, stats = adamw_update(

@@ -1,0 +1,121 @@
+"""Minimal deterministic fallback for the `hypothesis` API surface this
+test suite uses, installed by conftest.py only when the real package is
+missing (the dev extra in pyproject.toml pulls in the real one; CI uses it).
+
+Covers: @given over positional strategies, @settings(max_examples=...,
+deadline=...), and st.integers / st.floats / st.lists. Each test gets a
+fixed set of boundary examples plus seeded-random draws — far weaker than
+real hypothesis shrinking, but it keeps the property tests exercising the
+code instead of failing collection.
+"""
+from __future__ import annotations
+
+import types
+import zlib
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw, boundary=()):
+        self._draw = draw
+        self.boundary = list(boundary)   # deterministic edge-case examples
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value=0, max_value=1 << 30):
+    lo, hi = int(min_value), int(max_value)
+    edge = [lo, hi] + ([0] if lo <= 0 <= hi else [])
+    return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)), edge)
+
+
+def floats(min_value=-1e9, max_value=1e9, **_kw):
+    lo, hi = float(min_value), float(max_value)
+    edge = [lo, hi] + ([0.0] if lo <= 0.0 <= hi else [])
+    return _Strategy(lambda rng: float(rng.uniform(lo, hi)), edge)
+
+
+def lists(elements, min_size=0, max_size=10):
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(n)]
+
+    edge = []
+    seed_rng = np.random.default_rng(0)
+    edge.append([elements.draw(seed_rng) for _ in range(min_size)])
+    if max_size > min_size:
+        edge.append([elements.draw(seed_rng) for _ in range(max_size)])
+    # boundary element values at minimal length
+    if elements.boundary:
+        k = max(min_size, 1)
+        for b in elements.boundary:
+            edge.append([b] * k)
+    return _Strategy(draw, edge)
+
+
+def sampled_from(options):
+    options = list(options)
+    return _Strategy(lambda rng: options[int(rng.integers(len(options)))],
+                     options[:2])
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.integers(2)), [False, True])
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies, **kw_strategies):
+    def deco(fn):
+        # NOTE: the wrapper must present a ZERO-argument signature to
+        # pytest (no functools.wraps — pytest follows __wrapped__ and would
+        # mistake the strategy parameters for fixtures, like real
+        # hypothesis it has to hide them).
+        def wrapper():
+            max_examples = getattr(fn, "_stub_max_examples",
+                                   _DEFAULT_EXAMPLES)
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode()))
+            cases = []
+            if len(strategies) == 1:
+                cases += [(b,) for b in strategies[0].boundary]
+            for _ in range(max_examples):
+                cases.append(tuple(s.draw(rng) for s in strategies))
+            for case in cases[:max_examples + 8]:
+                kws = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                fn(*case, **kws)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+    return deco
+
+
+strategies = types.SimpleNamespace(
+    integers=integers, floats=floats, lists=lists,
+    sampled_from=sampled_from, booleans=booleans)
+
+
+def install(sys_modules) -> None:
+    """Register this stub as `hypothesis` / `hypothesis.strategies`."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "lists", "sampled_from", "booleans"):
+        setattr(st_mod, name, globals()[name])
+    mod.strategies = st_mod
+    mod.__stub__ = True
+    sys_modules["hypothesis"] = mod
+    sys_modules["hypothesis.strategies"] = st_mod

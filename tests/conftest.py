@@ -6,3 +6,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # Smoke tests and benches must see exactly the real device count (1 CPU).
 # The 512-device override happens ONLY inside repro.launch.dryrun/probes,
 # which run as separate processes.
+
+# Property tests use hypothesis (dev extra). In environments without it,
+# fall back to the minimal deterministic stub so the modules still collect
+# and the properties still run against seeded examples.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+    _hypothesis_stub.install(sys.modules)

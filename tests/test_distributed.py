@@ -116,7 +116,7 @@ def test_compressed_allreduce_multidevice():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh, PartitionSpec as P
-        from jax import shard_map
+        from repro.sharding.context import shard_map_nocheck
         from repro.training.compression import compressed_allreduce
 
         mesh = Mesh(np.array(jax.devices()[:4]), ("data",))
@@ -127,8 +127,8 @@ def test_compressed_allreduce_multidevice():
             red, _ = compressed_allreduce({"g": g_local[0]}, ef, "data")
             return red["g"][None]
 
-        red = shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P("data"),
-                        check_vma=False)(g)
+        red = shard_map_nocheck(f, mesh, in_specs=P("data"),
+                                out_specs=P("data"))(g)
         expect = jnp.mean(g, axis=0)
         err = float(jnp.max(jnp.abs(red[0] - expect)))
         scale = float(jnp.max(jnp.abs(g))) / 127.0

@@ -1,0 +1,227 @@
+"""Sparse/packed batching: dense-vs-sparse numerical equivalence, bucketing
+boundary cases, and packing correctness (DESIGN.md §4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import features as F
+from repro.core import gnn as G
+from repro.core.model import CostModelConfig, cost_model_apply, \
+    cost_model_init
+from repro.data import batching
+from repro.data.synthetic import random_kernel
+
+SIZES = [5, 12, 3, 20, 1, 17]
+
+
+def _graphs(sizes=None, seed0=0):
+    return [random_kernel(n, seed=seed0 + i)
+            for i, n in enumerate(sizes or SIZES)]
+
+
+def _normalizer(graphs):
+    return F.fit_normalizer(graphs)
+
+
+def _cfg(**kw):
+    base = dict(hidden_dim=32, opcode_embed_dim=8, transformer_heads=4,
+                gat_heads=2, max_nodes=24, dropout=0.0)
+    base.update(kw)
+    return CostModelConfig(**base)
+
+
+def _both_predictions(cfg, graphs, norm, key=0):
+    params = cost_model_init(jax.random.key(key), cfg)
+    dense = F.encode_batch(graphs, cfg.max_nodes, norm)
+    sparse = batching.encode_packed(graphs, norm)
+    pd = np.asarray(cost_model_apply(params, cfg, dense))
+    ps = np.asarray(cost_model_apply(params, cfg, sparse))[:len(graphs)]
+    return pd, ps
+
+
+# ----------------------------------------------------------------------------
+# dense-vs-sparse equivalence
+# ----------------------------------------------------------------------------
+@pytest.mark.parametrize("gnn", ["graphsage", "gat", "none"])
+@pytest.mark.parametrize("reduction", ["per_node", "column_wise", "lstm",
+                                       "transformer"])
+def test_model_equivalence(gnn, reduction):
+    graphs = _graphs()
+    norm = _normalizer(graphs)
+    cfg = _cfg(gnn=gnn, reduction=reduction)
+    pd, ps = _both_predictions(cfg, graphs, norm)
+    np.testing.assert_allclose(pd, ps, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("aggregator", ["mean", "sum"])
+@pytest.mark.parametrize("directed", [True, False])
+def test_sage_layer_equivalence(aggregator, directed):
+    graphs = _graphs()
+    norm = _normalizer(graphs)
+    cfg = _cfg(gnn="graphsage", reduction="column_wise",
+               aggregator=aggregator, directed=directed)
+    pd, ps = _both_predictions(cfg, graphs, norm)
+    np.testing.assert_allclose(pd, ps, rtol=1e-4, atol=1e-4)
+
+
+def test_gat_directed_equivalence_and_undirected_raises():
+    graphs = _graphs()
+    norm = _normalizer(graphs)
+    pd, ps = _both_predictions(_cfg(gnn="gat"), graphs, norm)
+    np.testing.assert_allclose(pd, ps, rtol=1e-4, atol=1e-4)
+
+    cfg = _cfg(gnn="gat", directed=False)
+    params = cost_model_init(jax.random.key(0), cfg)
+    sparse = batching.encode_packed(graphs, norm)
+    with pytest.raises(NotImplementedError):
+        cost_model_apply(params, cfg, sparse)
+
+
+def test_multi_edge_collapses_like_dense_adjacency():
+    """add(x, x) is one dense adjacency entry; the sparse edge list must
+    dedup it the same way or the message is double-counted."""
+    from repro.core import opset
+    from repro.core.graph import KernelGraph, Node
+    g = KernelGraph([
+        Node(opset.PARAMETER, (8, 8), 4),
+        Node(opset.ADD, (8, 8), 4, (0, 0), is_output=True),  # multi-edge
+    ])
+    assert len(g.edges()) == 2 and len(g.unique_edges()) == 1
+    norm = _normalizer([g])
+    cfg = _cfg(gnn="graphsage", aggregator="sum", reduction="column_wise")
+    pd, ps = _both_predictions(cfg, [g], norm)
+    np.testing.assert_allclose(pd, ps, rtol=1e-4, atol=1e-4)
+
+
+def test_sparse_permutation_invariance():
+    """Topology-preserving relabeling must not change set-based predictions
+    on the sparse path (mirrors the dense test in test_gnn_model)."""
+    from repro.core import opset
+    from repro.core.graph import KernelGraph, Node
+    nodes = [
+        Node(opset.PARAMETER, (32, 64), 4),
+        Node(opset.EXP, (32, 64), 4, (0,)),
+        Node(opset.TANH, (32, 64), 4, (0,)),
+        Node(opset.ADD, (32, 64), 4, (1, 2), is_output=True),
+    ]
+    g = KernelGraph(nodes, tile_size=(32, 64))
+    g_perm = g.renumbered([0, 2, 1, 3])
+    cfg = _cfg(reduction="column_wise")
+    params = cost_model_init(jax.random.key(0), cfg)
+    b = batching.encode_packed([g, g_perm])
+    preds = np.asarray(cost_model_apply(params, cfg, b))
+    assert preds[0] == pytest.approx(preds[1], rel=1e-5)
+
+
+def test_sparse_gradients_finite():
+    graphs = _graphs()
+    norm = _normalizer(graphs)
+    cfg = _cfg(gnn="graphsage", reduction="transformer")
+    params = cost_model_init(jax.random.key(1), cfg)
+    b = batching.encode_packed(graphs, norm)
+
+    def loss(p):
+        preds = cost_model_apply(p, cfg, b)
+        return jnp.sum((preds * jnp.asarray(b.graph_mask)) ** 2)
+
+    val, grads = jax.value_and_grad(loss)(params)
+    assert np.isfinite(float(val))
+    gn = sum(float(jnp.sum(jnp.abs(g)))
+             for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+# ----------------------------------------------------------------------------
+# packing correctness
+# ----------------------------------------------------------------------------
+def test_copacked_neighbors_do_not_affect_readout():
+    """A graph's prediction must be identical whether it is encoded alone or
+    packed with arbitrary other graphs."""
+    graphs = _graphs()
+    norm = _normalizer(graphs)
+    for reduction in ("column_wise", "transformer"):
+        cfg = _cfg(reduction=reduction)
+        params = cost_model_init(jax.random.key(2), cfg)
+        packed = batching.encode_packed(graphs, norm)
+        p_all = np.asarray(cost_model_apply(params, cfg, packed))
+        for i, g in enumerate(graphs):
+            alone = batching.encode_packed([g], norm)
+            p_one = float(cost_model_apply(params, cfg, alone)[0])
+            assert p_all[i] == pytest.approx(p_one, rel=1e-4, abs=1e-5), (
+                reduction, i)
+
+
+def test_pack_graphs_partition_and_budget():
+    graphs = _graphs([30, 10, 25, 5, 8, 2, 40])
+    packs = batching.pack_graphs(graphs, node_budget=40)
+    flat = sorted(i for p in packs for i in p)
+    assert flat == list(range(len(graphs)))          # exact partition
+    for p in packs:
+        total = sum(graphs[i].num_nodes for i in p)
+        assert total <= 40 or len(p) == 1            # only singletons overflow
+
+
+def test_pack_graphs_oversized_singleton():
+    graphs = _graphs([100, 4, 4])
+    packs = batching.pack_graphs(graphs, node_budget=16)
+    big = [p for p in packs if 0 in p]
+    assert big == [[0]]                              # oversized → own pack
+    spec = batching.bucket_for([graphs[0]])
+    assert spec.node_capacity == 128                 # ladder absorbs it
+
+
+def test_iter_packed_batches_roundtrip():
+    graphs = _graphs([30, 10, 25, 5, 8, 2, 40])
+    norm = _normalizer(graphs)
+    seen = []
+    for enc, idx in batching.iter_packed_batches(graphs, 40, norm):
+        assert enc.batch_size >= len(idx)
+        # slot g holds graphs[idx[g]]: check node counts line up
+        counts = np.asarray([
+            int(enc.gather_mask[g].sum()) for g in range(len(idx))])
+        expect = np.asarray([graphs[i].num_nodes for i in idx])
+        np.testing.assert_array_equal(counts, expect)
+        seen.extend(idx)
+    assert sorted(seen) == list(range(len(graphs)))
+
+
+# ----------------------------------------------------------------------------
+# bucketing boundaries
+# ----------------------------------------------------------------------------
+def test_bucket_exactly_at_edge():
+    """A pack whose totals are exactly a power of two stays in that bucket;
+    one more node spills to the next."""
+    g64 = random_kernel(64, seed=7)
+    spec = batching.bucket_for([g64], min_nodes=1, min_edges=1, min_reduce=1)
+    assert spec.node_capacity == 64
+    g65 = random_kernel(65, seed=7)
+    spec2 = batching.bucket_for([g65], min_nodes=1, min_edges=1,
+                                min_reduce=1)
+    assert spec2.node_capacity == 128
+    assert spec2.reduce_capacity == 128
+
+
+def test_bucket_bounds_jit_shapes():
+    """Different packs under the same corpus land in a small set of bucket
+    specs (the point of the pow2 ladder)."""
+    rng = np.random.default_rng(0)
+    specs = set()
+    for trial in range(20):
+        sizes = rng.integers(2, 60, size=rng.integers(2, 8))
+        graphs = [random_kernel(int(n), seed=int(trial * 100 + j))
+                  for j, n in enumerate(sizes)]
+        specs.add(batching.bucket_for(
+            graphs, min_graphs=batching.round_up_pow2(len(graphs))))
+    assert len(specs) <= 12
+
+
+def test_encode_sparse_capacity_validation():
+    g = random_kernel(10, seed=0)
+    with pytest.raises(ValueError):
+        F.encode_sparse_batch([g], node_capacity=5)
+    with pytest.raises(ValueError):
+        F.encode_sparse_batch([g], reduce_capacity=5)
+    enc = F.encode_sparse_batch([g], node_capacity=16, graph_capacity=4)
+    assert enc.num_nodes == 16 and enc.batch_size == 4
+    assert float(enc.graph_mask.sum()) == 1.0
