@@ -1,0 +1,93 @@
+"""Cached + coalescing serving vs uncached per-request scoring
+(docs/SERVING.md; acceptance gate for the prediction service).
+
+Replays a deterministic tile-search query stream — several search rounds
+per kernel over overlapping candidate subsets, the revisit pattern of
+top-k re-ranking and annealing (`repro.serving.replay`) — two ways:
+
+  * direct  — `core.evaluate.predict_kernels` per request (encode + score
+    every query every time; the pre-serving behavior of every call site),
+  * service — `CostModelService` (content-addressed cache + coalescer +
+    bucketed sparse flushes).
+
+Both run on warm jit executables (a throwaway warmup pass compiles every
+bucket shape first). PASS requires the service to reach >=2x the direct
+throughput with max prediction delta <1e-4 (features go through a fitted
+FeatureNormalizer — unnormalized f32 features lose the tolerance to
+summation-order effects).
+
+  PYTHONPATH=src python benchmarks/bench_serving.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.core.evaluate import make_predict_fn, predict_kernels
+from repro.core.model import CostModelConfig, cost_model_init
+from repro.serving import CostModelService
+from repro.serving.replay import build_tile_replay, run_replay
+
+SCALE = float(os.environ.get("BENCH_SCALE", "1.0"))
+NUM_PROGRAMS = max(int(6 * SCALE), 3)
+MAX_CONFIGS = 16
+ROUNDS = 4
+SUBSET = 0.75
+
+
+def main() -> int:
+    replay = build_tile_replay(NUM_PROGRAMS, max_configs=MAX_CONFIGS,
+                               rounds=ROUNDS, subset=SUBSET, seed=0)
+    max_nodes = max(g.num_nodes for r in replay.requests for g in r)
+    cfg = CostModelConfig(gnn="graphsage", reduction="column_wise",
+                          hidden_dim=48, opcode_embed_dim=16, dropout=0.0,
+                          max_nodes=max_nodes, adjacency="sparse")
+    params = cost_model_init(jax.random.key(0), cfg)
+    predict_fn = make_predict_fn(cfg)
+    print(f"bench_serving: {replay.num_kernels} kernels, "
+          f"{len(replay.requests)} requests, {replay.num_queries} queries "
+          f"({replay.num_unique} unique graphs)")
+
+    def make_service() -> CostModelService:
+        return CostModelService(params, cfg, replay.normalizer,
+                                predict_fn=predict_fn)
+
+    def direct(graphs):
+        return predict_kernels(params, cfg, graphs, replay.normalizer,
+                               max_nodes=max_nodes, predict_fn=predict_fn)
+
+    # warmup: compile every bucket shape either path can produce — the
+    # service's miss-set packs and the direct path's full-request packs
+    # can land in different BucketSpecs, so each path warms its own
+    run_replay(make_service().predict_many, replay.requests)
+    run_replay(direct, replay.requests)
+
+    service = make_service()
+    svc_preds, svc_dt = run_replay(service.predict_many, replay.requests)
+    dir_preds, dir_dt = run_replay(direct, replay.requests)
+
+    stats = service.stats()
+    err = max(float(np.max(np.abs(a - b)))
+              for a, b in zip(svc_preds, dir_preds))
+    speedup = dir_dt / svc_dt
+    print(f"  direct   {replay.num_queries / dir_dt:8.0f} queries/s "
+          f"({dir_dt:.2f}s)")
+    print(f"  service  {replay.num_queries / svc_dt:8.0f} queries/s "
+          f"({svc_dt:.2f}s)  hit_rate={stats.hit_rate:.1%} "
+          f"flushes={stats.flushes} p50={stats.latency_p50_ms:.2f}ms "
+          f"p99={stats.latency_p99_ms:.2f}ms")
+    print(f"  speedup {speedup:.2f}x, max prediction delta {err:.2e}")
+    ok = speedup >= 2.0 and err < 1e-4
+    print(f"bench_serving: {'PASS' if ok else 'FAIL'} "
+          f"(need >=2x speedup and <1e-4 prediction delta)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

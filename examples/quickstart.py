@@ -10,12 +10,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core.evaluate import eval_tile_task, learned_tile_scorer
+from repro.core.evaluate import eval_tile_task
 from repro.data.tile_dataset import build_tile_dataset, fit_tile_normalizer
 from repro.core.model import CostModelConfig
 from repro.core.simulator import TPUSimulator
 from repro.data.sampler import TileBatchSampler
 from repro.data.synthetic import generate_corpus
+from repro.serving import CostModelService
 from repro.training.optim import AdamWConfig
 from repro.training.trainer import CostModelTrainer, TrainerConfig
 
@@ -43,9 +44,11 @@ trainer = CostModelTrainer(
 res = trainer.run(resume=False)
 print(f"trained 300 steps, final rank loss {res['loss']:.4f}")
 
-# 3. rank tile sizes for one kernel and compare with ground truth
-scorer = learned_tile_scorer(trainer.params, model_cfg, norm,
-                             max_nodes=MAX_NODES, chunk=32)
+# 3. serve the trained model (docs/SERVING.md) and rank tile sizes for one
+#    kernel — predictions go through the cached, coalescing service
+service = CostModelService(trainer.params, model_cfg, norm,
+                           max_nodes=MAX_NODES, chunk=32)
+scorer = service.tile_scorer()
 rec = max(dataset.records, key=lambda r: len(r.tiles))
 scores = scorer(rec.kernel, rec.tiles)
 pred_best = rec.tiles[int(np.argmin(scores))]
@@ -59,3 +62,8 @@ print(f"  true best    {true_best} -> {rec.runtimes.min():.3e}s")
 metrics = eval_tile_task(dataset, scorer)
 print(f"mean tile APE {metrics['mean_ape']:.2f}%  "
       f"mean Kendall tau {metrics['mean_kendall']:.3f}")
+
+# the service cached every (kernel, tile) query above; step 3's kernel hit
+stats = service.stats()
+print(f"service: {stats.graphs} queries, hit rate {stats.hit_rate:.1%}, "
+      f"{stats.flushes} flushes, p50 {stats.latency_p50_ms:.1f}ms/call")

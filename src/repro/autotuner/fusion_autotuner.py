@@ -34,8 +34,13 @@ CostFn = Callable[[Sequence[KernelGraph]], float]
 
 def model_cost_fn(params, model_cfg, normalizer, *, max_nodes: int = 64,
                   chunk: int = 128, node_budget: int | None = None,
-                  predict_fn=None) -> CostFn:
+                  predict_fn=None, service=None,
+                  cache_capacity: int = 65536) -> CostFn:
     """Program cost under the learned model: Σ exp(predicted log-runtime).
+
+    Scores through the prediction service: neighboring annealing steps
+    share most of their kernels, so the content-addressed cache turns the
+    per-step cost into scoring only the few kernels the last flip changed.
 
     Representation follows `model_cfg.adjacency`. The dense path must drop
     kernels above `max_nodes` (its padded slots truncate them anyway); the
@@ -43,6 +48,17 @@ def model_cost_fn(params, model_cfg, normalizer, *, max_nodes: int = 64,
     per-graph cap, which also removes a systematic bias of the dense
     annealer objective on large fusion groups.
     """
+    if service is None and cache_capacity:
+        from repro.serving import CostModelService
+        service = CostModelService(params, model_cfg, normalizer,
+                                   max_nodes=max_nodes, chunk=chunk,
+                                   node_budget=node_budget,
+                                   predict_fn=predict_fn,
+                                   cache_capacity=cache_capacity)
+    if service is not None:
+        drop = max_nodes if service.adjacency == "dense" else None
+        return service.cost_fn(drop_above=drop)
+
     from repro.core.evaluate import make_predict_fn, predict_kernels
 
     predict = predict_fn or make_predict_fn(model_cfg)

@@ -26,16 +26,21 @@ Scorer = Callable[[KernelGraph, Sequence[tuple[int, ...]]], np.ndarray]
 
 
 def model_scorer(params, model_cfg, normalizer, *, max_nodes: int = 64,
-                 chunk: int = 128, node_budget: int | None = None) -> Scorer:
-    """Learned-model scorer for `tune_kernel_tiles`. The batched-graph
-    representation follows `model_cfg.adjacency`: 'sparse' packs the tile
-    candidates (all sharing one kernel graph) into bucketed flat batches —
-    markedly higher scoring throughput on big candidate sets — while
-    'dense' keeps the padded [B, N, N] layout."""
+                 chunk: int = 128, node_budget: int | None = None,
+                 service=None, cache_capacity: int = 65536) -> Scorer:
+    """Learned-model scorer for `tune_kernel_tiles`, scoring through the
+    prediction service (`repro.serving.CostModelService`): tile candidates
+    of one kernel are near-duplicate graphs, so across tuning passes the
+    content-addressed cache absorbs most queries, and misses flush through
+    the bucketed batcher in `model_cfg.adjacency` representation ('sparse'
+    packs candidates into flat bucketed batches — markedly higher scoring
+    throughput on big candidate sets — while 'dense' keeps the padded
+    [B, N, N] layout). Pass `service` to share one cache across scorers."""
     from repro.core.evaluate import learned_tile_scorer
     return learned_tile_scorer(params, model_cfg, normalizer,
                                max_nodes=max_nodes, chunk=chunk,
-                               node_budget=node_budget)
+                               node_budget=node_budget, service=service,
+                               cache_capacity=cache_capacity)
 
 
 @dataclass
@@ -49,6 +54,14 @@ class TileTuneResult:
 
     @property
     def regret(self) -> float:
+        """Relative slowdown of the chosen tile vs the exhaustive best.
+
+        >>> r = TileTuneResult("k", (8,), chosen_runtime=1.2,
+        ...                    best_runtime=1.0, hardware_evals=3,
+        ...                    candidates=10)
+        >>> round(r.regret, 6)
+        0.2
+        """
         if self.best_runtime <= 0:
             return 0.0
         return self.chosen_runtime / self.best_runtime - 1.0

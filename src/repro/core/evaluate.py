@@ -42,6 +42,11 @@ def predict_kernels(params, model_cfg: CostModelConfig, graphs, normalizer,
              small kernels never pay big kernels' padding.
 
     `adjacency` defaults to `model_cfg.adjacency`.
+
+    This is the *direct* (uncached) path; high-traffic clients should go
+    through `repro.serving.CostModelService`, which adds the
+    content-addressed cache and request coalescing on top of the same
+    encoders (docs/SERVING.md).
     """
     if adjacency is None:
         adjacency = model_cfg.adjacency
@@ -83,7 +88,23 @@ def eval_tile_program(records, scorer) -> dict:
 
 
 def learned_tile_scorer(params, model_cfg, normalizer, *, max_nodes=64,
-                        chunk=128, adjacency=None, node_budget=None):
+                        chunk=128, adjacency=None, node_budget=None,
+                        service=None, cache_capacity=65536):
+    """Tile scorer backed by a `repro.serving.CostModelService`: every
+    (kernel, tile) query goes through the content-addressed prediction
+    cache + coalescer, so revisited candidates (top-k re-ranks, repeated
+    eval sweeps) are scored once. Pass an existing `service` to share its
+    cache across scorers; otherwise one is built from these arguments
+    (`cache_capacity=0` falls back to direct uncached scoring)."""
+    if service is None and cache_capacity:
+        from repro.serving import CostModelService
+        service = CostModelService(params, model_cfg, normalizer,
+                                   adjacency=adjacency, max_nodes=max_nodes,
+                                   chunk=chunk, node_budget=node_budget,
+                                   cache_capacity=cache_capacity)
+    if service is not None:
+        return service.tile_scorer()
+
     predict = make_predict_fn(model_cfg)
 
     def scorer(kernel, tiles):
@@ -149,8 +170,20 @@ def eval_fusion_task(dataset, predict_runtimes, *,
 
 def learned_runtime_predictor(params, model_cfg, normalizer, *,
                               max_nodes=64, chunk=128, adjacency=None,
-                              node_budget=None):
-    """Fusion-task model predicts log-runtime; exponentiate."""
+                              node_budget=None, service=None,
+                              cache_capacity=65536):
+    """Fusion-task model predicts log-runtime; exponentiate. Scores
+    through a `repro.serving.CostModelService` (see `learned_tile_scorer`
+    for the `service`/`cache_capacity` contract)."""
+    if service is None and cache_capacity:
+        from repro.serving import CostModelService
+        service = CostModelService(params, model_cfg, normalizer,
+                                   adjacency=adjacency, max_nodes=max_nodes,
+                                   chunk=chunk, node_budget=node_budget,
+                                   cache_capacity=cache_capacity)
+    if service is not None:
+        return service.runtime_predictor()
+
     predict = make_predict_fn(model_cfg)
 
     def predict_runtimes(kernels):

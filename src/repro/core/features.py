@@ -121,6 +121,15 @@ def adjacency(g: KernelGraph, n_max: int) -> np.ndarray:
 # ----------------------------------------------------------------------------
 @dataclass
 class FeatureNormalizer:
+    """Per-feature min-max scaling to [0, 1], statistics fit on the
+    training set only (paper footnote 1); out-of-range values clip.
+
+    >>> import numpy as np
+    >>> n = FeatureNormalizer(node_min=np.zeros(2), node_max=np.full(2, 2.0),
+    ...                       kernel_min=np.zeros(1), kernel_max=np.ones(1))
+    >>> n.transform_node(np.array([[1.0, 4.0]])).tolist()
+    [[0.5, 1.0]]
+    """
     node_min: np.ndarray
     node_max: np.ndarray
     kernel_min: np.ndarray

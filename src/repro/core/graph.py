@@ -1,19 +1,27 @@
 """Kernel-graph IR.
 
-Two representations:
+Three representations:
 
 * `Node` / `KernelGraph` — host-side (numpy / python) graph with full
   static semantics. This is what the generator, importer, simulator and
   analytical model operate on. Nodes are stored in topological order
   (guaranteed by construction in the generator/importer) — the paper's LSTM
   reduction runs over topologically sorted nodes.
-* `GraphBatch` — a padded, masked, device-ready pytree produced by
-  `features.encode_batch`. The adjacency is dense `[B, N, N]`
+* `features.GraphBatch` — a padded, masked, device-ready pytree produced
+  by `features.encode_batch`. The adjacency is dense `[B, N, N]`
   (`adj[b, d, s] = 1` iff edge s→d), which on TPU turns neighbor
   aggregation into an MXU matmul (see DESIGN.md §3).
+* `features.SparseGraphBatch` — the packed equivalent (flat node/edge
+  buffers + segment ids) produced by `features.encode_sparse_batch` via
+  the bucketing batcher in `repro.data.batching` (DESIGN.md §4).
+
+`KernelGraph.canonical_hash()` content-addresses a graph (structure +
+tile, invariant to node renumbering) — the serving cache key
+(`repro.serving`, DESIGN.md §8).
 """
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
 from typing import Iterable, Sequence
 
@@ -175,7 +183,78 @@ class KernelGraph:
         cached = getattr(self, "_unique_edges", None)
         if cached is not None:       # same nodes ⇒ same edge set
             g._unique_edges = cached
+        digests = getattr(self, "_node_digests", None)
+        if digests is not None:      # same nodes ⇒ same node digests
+            g._node_digests = digests
         return g
+
+    # --- content addressing (serving cache key; docs/SERVING.md) ------------
+    def _merkle_node_digests(self) -> list[bytes]:
+        """Per-node Merkle digests: each covers the node's semantic content
+        (op, shape, dtype size, output flag, contraction/filter/reduction
+        metadata, fan-out) plus the digests of its producers in input
+        order, so it identifies the node's whole ancestor cone —
+        independent of node indices. Memoized, and copied by `with_tile`
+        (same nodes ⇒ same digests)."""
+        cached = getattr(self, "_node_digests", None)
+        if cached is None:
+            fan_out = self.fan_out()
+            cached = []
+            for i, n in enumerate(self.nodes):
+                h = hashlib.blake2b(digest_size=16)
+                h.update(repr((n.op.index, n.shape, n.dtype_bytes,
+                               n.is_output, n.contract_dim, n.filter_size,
+                               n.reduced_dims, int(fan_out[i]))).encode())
+                for j in n.inputs:
+                    h.update(cached[j])
+                cached.append(h.digest())
+            self._node_digests = cached
+        return cached
+
+    def structural_digest(self, *, order_sensitive: bool = False) -> bytes:
+        """Digest of the graph structure: node count + the Merkle node
+        digests. By default the digests are *sorted*, so any topological-
+        order-preserving relabeling (`renumbered`) produces the same
+        bytes; `order_sensitive=True` keeps them in stored node order,
+        for consumers that are not permutation-invariant (the LSTM
+        reduction runs over topologically sorted node order)."""
+        digests = self._merkle_node_digests()
+        top = hashlib.blake2b(digest_size=16)
+        top.update(len(self.nodes).to_bytes(8, "little"))
+        for d in (digests if order_sensitive else sorted(digests)):
+            top.update(d)
+        return top.digest()
+
+    def canonical_hash(self, *, order_sensitive: bool = False) -> str:
+        """Content-addressed identity of (structure, tile_size) — the
+        prediction-cache key used by `repro.serving`. Deliberately excludes
+        `program`/`name` (labels don't affect predictions) and is invariant
+        to node renumbering, mirroring the set semantics of `unique_edges`:
+        two graphs with equal hashes encode to equivalent feature batches.
+
+        `order_sensitive=True` additionally hashes the node *order*, for
+        models whose predictions depend on it (`reduction="lstm"`;
+        `CostModelService` selects this automatically).
+
+        >>> from repro.core import opset
+        >>> from repro.core.graph import KernelGraph, Node
+        >>> g = KernelGraph([Node(opset.PARAMETER, (8, 8)),
+        ...                  Node(opset.PARAMETER, (4, 8)),
+        ...                  Node(opset.DOT, (4, 8), inputs=(1, 0),
+        ...                       contract_dim=8, is_output=True)],
+        ...                 name="demo")
+        >>> g.canonical_hash() == g.renumbered([1, 0, 2]).canonical_hash()
+        True
+        >>> g.canonical_hash() == g.with_tile((8, 8)).canonical_hash()
+        False
+        >>> h = lambda x: x.canonical_hash(order_sensitive=True)
+        >>> h(g) == h(g.renumbered([1, 0, 2]))     # distinct params swapped
+        False
+        """
+        h = hashlib.blake2b(digest_size=16)
+        h.update(self.structural_digest(order_sensitive=order_sensitive))
+        h.update(repr(self.tile_size).encode())
+        return h.hexdigest()
 
     def renumbered(self, perm: Sequence[int]) -> "KernelGraph":
         """Relabel nodes by `perm` (new order = [nodes[p] for p in perm]).

@@ -27,7 +27,15 @@ from repro.core.graph import KernelGraph
 
 
 def round_up_pow2(n: int, minimum: int = 1) -> int:
-    """Smallest power of two ≥ max(n, minimum)."""
+    """Smallest power of two ≥ max(n, minimum).
+
+    >>> round_up_pow2(9)
+    16
+    >>> round_up_pow2(8, minimum=4)
+    8
+    >>> round_up_pow2(0)
+    1
+    """
     target = max(int(n), int(minimum), 1)
     cap = 1
     while cap < target:
@@ -53,7 +61,13 @@ def bucket_for(graphs: Sequence[KernelGraph], *, min_nodes: int = 32,
                min_reduce: int = 8) -> BucketSpec:
     """Bucket key for a pack: every required capacity rounded up a
     power-of-two ladder. A graph exactly at a bucket edge stays in that
-    bucket (round_up_pow2 is inclusive); one node more spills to the next."""
+    bucket (round_up_pow2 is inclusive); one node more spills to the next.
+
+    >>> from repro.data.synthetic import random_kernel
+    >>> spec = bucket_for([random_kernel(33, seed=0)])
+    >>> (spec.node_capacity, spec.graph_capacity, spec.reduce_capacity)
+    (64, 1, 64)
+    """
     n = sum(g.num_nodes for g in graphs)
     e = sum(len(g.unique_edges()) for g in graphs)
     r = max(g.num_nodes for g in graphs)
@@ -72,6 +86,13 @@ def pack_graphs(graphs: Sequence[KernelGraph], node_budget: int,
     with Σ nodes ≤ node_budget per pack. A single graph larger than the
     budget gets its own (oversized) singleton pack rather than being
     dropped — the bucket ladder absorbs it.
+
+    >>> from repro.data.synthetic import random_kernel
+    >>> gs = [random_kernel(n, seed=n) for n in (5, 9, 3)]
+    >>> pack_graphs(gs, node_budget=12)       # 9+3 share a pack, 5 spills
+    [[1, 2], [0]]
+    >>> pack_graphs(gs, node_budget=2)        # oversized -> singleton packs
+    [[1], [0], [2]]
     """
     order = sorted(range(len(graphs)),
                    key=lambda i: (-graphs[i].num_nodes, i))

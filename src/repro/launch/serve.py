@@ -3,8 +3,19 @@
   PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-3-4b \
       --smoke --batch 4 --prompt-len 32 --decode-steps 16
 
-Reduced configs run end-to-end on CPU; the full-size serving steps are
-exercised (lower+compile) by the dry-run's prefill/decode cells.
+Flags:
+  --arch NAME         architecture from `repro.models.registry` (required)
+  --smoke | --full    mutually exclusive size choice. `--smoke` (default)
+                      runs the reduced config end-to-end on CPU; `--full`
+                      initializes the full-size config — real parameter
+                      memory, intended for accelerator hosts (the CPU
+                      container covers full-size shapes via the dry-run's
+                      lower+compile cells instead).
+  --batch N           concurrent request streams          (default 4)
+  --prompt-len N      prefill length in tokens            (default 32)
+  --decode-steps N    autoregressive steps after prefill  (default 16)
+  --temperature F     0 = greedy argmax, >0 = sampling    (default 0.0)
+  --seed N            params/prompt/sampling seed         (default 0)
 """
 from __future__ import annotations
 
@@ -17,9 +28,17 @@ import numpy as np
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="Batched prefill+decode serving loop for the LM zoo.")
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true", default=True)
+    size = ap.add_mutually_exclusive_group()
+    size.add_argument("--smoke", dest="size", action="store_const",
+                      const="smoke",
+                      help="reduced config, runs on CPU (default)")
+    size.add_argument("--full", dest="size", action="store_const",
+                      const="full",
+                      help="full-size config (accelerator-scale memory)")
+    ap.set_defaults(size="smoke")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--decode-steps", type=int, default=16)
@@ -29,7 +48,8 @@ def main() -> None:
 
     from repro.models import lm, registry
 
-    cfg = registry.get_smoke_config(args.arch)
+    cfg = registry.get_smoke_config(args.arch) if args.size == "smoke" \
+        else registry.get_config(args.arch)
     capacity = args.prompt_len + args.decode_steps
     params = lm.init_params(jax.random.key(args.seed), cfg)
     prefill = jax.jit(lm.prefill_step_fn(cfg, capacity=capacity))

@@ -1,0 +1,26 @@
+"""Cost-model prediction service (docs/SERVING.md, docs/API.md).
+
+The serving layer between clients (autotuners, fusion/tile evaluators,
+future compiler hooks) and the GNN:
+
+* `PredictionCache` — content-addressed LRU keyed by
+  `KernelGraph.canonical_hash()`;
+* `RequestCoalescer` — accumulates cache-miss graphs and flushes them
+  through the bucketed sparse batcher in one call;
+* `CostModelService` — the facade: `predict_many`, deferred `submit`,
+  drop-in `tile_scorer`/`runtime_predictor`/`cost_fn` adapters, and a
+  `stats()` surface (hit rate, bucket occupancy, flush sizes, latency).
+"""
+from repro.serving.cache import CacheStats, PredictionCache
+from repro.serving.coalescer import RequestCoalescer, Ticket
+from repro.serving.service import (
+    BucketStats,
+    CostModelService,
+    PendingRequest,
+    ServiceStats,
+)
+
+__all__ = [
+    "CacheStats", "PredictionCache", "RequestCoalescer", "Ticket",
+    "BucketStats", "CostModelService", "PendingRequest", "ServiceStats",
+]

@@ -1,0 +1,85 @@
+"""Content-addressed prediction cache (docs/SERVING.md, stage 1).
+
+Keys are `KernelGraph.canonical_hash()` strings, values are scalar model
+predictions. The cache is a plain LRU over an `OrderedDict`: a `get` hit
+refreshes recency, a `put` past capacity evicts the least-recently-used
+entry. Everything is counted so `CostModelService.stats()` can report hit
+rates and eviction pressure.
+
+>>> c = PredictionCache(capacity=2)
+>>> c.put("a", 1.0); c.put("b", 2.0)
+>>> c.get("a")
+1.0
+>>> c.put("c", 3.0)            # evicts "b" ("a" was refreshed by the hit)
+>>> c.get("b") is None
+True
+>>> s = c.stats()
+>>> (s.hits, s.misses, s.evictions, s.size)
+(1, 1, 1, 2)
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class CacheStats:
+    """Counters since construction (`hits`/`misses` only count `get`)."""
+    hits: int
+    misses: int
+    evictions: int
+    size: int
+    capacity: int
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class PredictionCache:
+    """Bounded LRU map: canonical graph hash -> predicted score."""
+
+    def __init__(self, capacity: int = 65536):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self._data: OrderedDict[str, float] = OrderedDict()
+        self._hits = 0
+        self._misses = 0
+        self._evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key: str) -> bool:
+        """Peek without touching recency or hit/miss counters."""
+        return key in self._data
+
+    def get(self, key: str) -> float | None:
+        """Counted lookup; a hit refreshes the entry's recency."""
+        val = self._data.get(key)
+        if val is None:
+            self._misses += 1
+            return None
+        self._data.move_to_end(key)
+        self._hits += 1
+        return val
+
+    def put(self, key: str, value: float) -> None:
+        if key in self._data:
+            self._data.move_to_end(key)
+            self._data[key] = float(value)
+            return
+        self._data[key] = float(value)
+        if len(self._data) > self.capacity:
+            self._data.popitem(last=False)
+            self._evictions += 1
+
+    def clear(self) -> None:
+        self._data.clear()
+
+    def stats(self) -> CacheStats:
+        return CacheStats(self._hits, self._misses, self._evictions,
+                          len(self._data), self.capacity)

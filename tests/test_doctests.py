@@ -1,0 +1,30 @@
+"""Executable documentation: run the curated modules' docstring examples.
+
+Every module listed here ships `>>>` examples in its docstrings (the same
+snippets docs/API.md quotes); this test keeps them from rotting. The CI
+docs job additionally runs `pytest --doctest-modules` over the same set —
+see .github/workflows/ci.yml.
+"""
+import doctest
+import importlib
+
+import pytest
+
+CURATED_MODULES = [
+    "repro.core.graph",
+    "repro.core.features",
+    "repro.data.batching",
+    "repro.autotuner.tile_autotuner",
+    "repro.serving.cache",
+    "repro.serving.coalescer",
+    "repro.serving.service",
+]
+
+
+@pytest.mark.parametrize("module_name", CURATED_MODULES)
+def test_module_doctests(module_name):
+    module = importlib.import_module(module_name)
+    result = doctest.testmod(module, verbose=False)
+    assert result.attempted > 0, \
+        f"{module_name} is curated but has no doctest examples"
+    assert result.failed == 0

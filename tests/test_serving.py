@@ -1,0 +1,309 @@
+"""Prediction-service tests: canonical hashing, cache accounting,
+coalescing, and parity with the direct scoring path (docs/SERVING.md)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import features as F
+from repro.core import opset
+from repro.core.evaluate import make_predict_fn, predict_kernels
+from repro.core.graph import KernelGraph, Node
+from repro.core.model import CostModelConfig, cost_model_init
+from repro.data.synthetic import random_kernel
+from repro.serving import (
+    CostModelService,
+    PredictionCache,
+    RequestCoalescer,
+)
+
+MAX_NODES = 32
+
+
+def _diamond(name="demo", program="p", tile=()):
+    """param/param -> add -> (tanh, exp) -> mul; rebuilt fresh each call."""
+    nodes = [
+        Node(opset.PARAMETER, (8, 16)),
+        Node(opset.PARAMETER, (8, 16)),
+        Node(opset.ADD, (8, 16), inputs=(0, 1)),
+        Node(opset.TANH, (8, 16), inputs=(2,)),
+        Node(opset.EXP, (8, 16), inputs=(2,)),
+        Node(opset.MUL, (8, 16), inputs=(3, 4), is_output=True),
+    ]
+    return KernelGraph(nodes, program=program, name=name,
+                       tile_size=tuple(tile))
+
+
+# ---------------------------------------------------------------------------
+# canonical_hash
+# ---------------------------------------------------------------------------
+def test_hash_invariant_under_topo_permutation():
+    g = _diamond()
+    # nodes 3 (tanh) and 4 (exp) are independent; params 0/1 swappable
+    for perm in ([0, 1, 2, 4, 3, 5], [1, 0, 2, 3, 4, 5],
+                 [1, 0, 2, 4, 3, 5]):
+        assert g.canonical_hash() == g.renumbered(perm).canonical_hash()
+
+
+def test_hash_is_content_addressed_not_identity():
+    a = _diamond(name="a", program="prog1")
+    b = _diamond(name="b", program="prog2")     # labels must not matter
+    assert a is not b
+    assert a.canonical_hash() == b.canonical_hash()
+
+
+def test_hash_sensitive_to_content():
+    g = _diamond()
+    assert g.canonical_hash() != g.with_tile((8, 8)).canonical_hash()
+    assert g.with_tile((8, 8)).canonical_hash() == \
+        _diamond(tile=(8, 8)).canonical_hash()
+    bigger = KernelGraph([Node(opset.PARAMETER, (8, 32))] +
+                         _diamond().nodes[1:], name="demo")
+    assert g.canonical_hash() != bigger.canonical_hash()
+
+
+def test_hash_distinguishes_sharing_structure():
+    """One shared producer vs two identical producers (different graphs
+    with the same node *types*) must not collide."""
+    shared = KernelGraph([
+        Node(opset.PARAMETER, (4, 4)),
+        Node(opset.TANH, (4, 4), inputs=(0,)),
+        Node(opset.ADD, (4, 4), inputs=(1, 1), is_output=True),
+    ])
+    split = KernelGraph([
+        Node(opset.PARAMETER, (4, 4)),
+        Node(opset.TANH, (4, 4), inputs=(0,)),
+        Node(opset.TANH, (4, 4), inputs=(0,)),
+        Node(opset.ADD, (4, 4), inputs=(1, 2), is_output=True),
+    ])
+    assert shared.canonical_hash() != split.canonical_hash()
+
+
+def test_with_tile_shares_structural_digest():
+    g = _diamond()
+    digest = g.structural_digest()
+    tiled = g.with_tile((4, 4))
+    assert tiled._node_digests is g._node_digests   # memo shared, not redone
+    assert tiled.structural_digest() == digest
+
+
+def test_order_sensitive_hash_tracks_node_order():
+    g = _diamond()
+    perm = [0, 1, 2, 4, 3, 5]
+    assert g.canonical_hash(order_sensitive=True) != \
+        g.renumbered(perm).canonical_hash(order_sensitive=True)
+    # same order => same hash, and it still ignores labels
+    assert g.canonical_hash(order_sensitive=True) == \
+        _diamond(name="other").canonical_hash(order_sensitive=True)
+
+
+def test_service_keys_lstm_configs_by_node_order(world):
+    """The LSTM reduction consumes node order, so its service must not
+    alias isomorphic-but-reordered graphs to one cache entry."""
+    lstm_cfg = CostModelConfig(gnn="graphsage", reduction="lstm",
+                               hidden_dim=16, opcode_embed_dim=8,
+                               dropout=0.0, max_nodes=MAX_NODES,
+                               adjacency="sparse")
+    lstm_svc = CostModelService(cost_model_init(jax.random.key(0), lstm_cfg),
+                                lstm_cfg, world["norm"])
+    g = _diamond()
+    gp = g.renumbered([0, 1, 2, 4, 3, 5])
+    assert lstm_svc.cache_key(g) != lstm_svc.cache_key(gp)
+    invariant_svc = _service(world)           # column_wise: order-free
+    assert invariant_svc.cache_key(g) == invariant_svc.cache_key(gp)
+
+
+def test_random_kernels_mostly_distinct():
+    graphs = [random_kernel(n, seed=s) for n in (6, 11, 19)
+              for s in (0, 1, 2)]
+    hashes = {g.canonical_hash() for g in graphs}
+    assert len(hashes) == len(graphs)
+
+
+# ---------------------------------------------------------------------------
+# PredictionCache
+# ---------------------------------------------------------------------------
+def test_cache_hit_miss_accounting():
+    c = PredictionCache(capacity=8)
+    assert c.get("x") is None
+    c.put("x", 1.5)
+    assert c.get("x") == 1.5
+    assert "x" in c and "y" not in c          # peek: no counter change
+    s = c.stats()
+    assert (s.hits, s.misses, s.evictions) == (1, 1, 0)
+    assert s.hit_rate == pytest.approx(0.5)
+
+
+def test_cache_eviction_at_capacity_is_lru():
+    c = PredictionCache(capacity=2)
+    c.put("a", 1.0)
+    c.put("b", 2.0)
+    assert c.get("a") == 1.0                  # refresh "a"
+    c.put("c", 3.0)                           # evicts "b"
+    assert c.get("b") is None
+    assert c.get("a") == 1.0 and c.get("c") == 3.0
+    s = c.stats()
+    assert s.evictions == 1 and s.size == 2 and len(c) == 2
+
+
+# ---------------------------------------------------------------------------
+# RequestCoalescer
+# ---------------------------------------------------------------------------
+def _count_scorer(calls):
+    def score(graphs):
+        calls.append(len(graphs))
+        return np.arange(len(graphs), dtype=np.float32)
+    return score
+
+
+def test_coalescer_dedups_pending():
+    calls = []
+    co = RequestCoalescer(_count_scorer(calls), node_budget=10**6)
+    g = random_kernel(7, seed=0)
+    t1 = co.add(g.canonical_hash(), g)
+    t2 = co.add(g.canonical_hash(), g)
+    assert t1 is t2 and co.coalesced == 1 and co.pending == 1
+    co.flush()
+    assert t1.ready and calls == [1]
+    co.flush()                                 # empty flush is a no-op
+    assert co.flushes == 1
+
+
+def test_coalescer_auto_flush_at_node_budget():
+    calls = []
+    co = RequestCoalescer(_count_scorer(calls), node_budget=16)
+    tickets = [co.add(g.canonical_hash(), g)
+               for g in (random_kernel(n, seed=s)
+                         for n, s in ((6, 0), (6, 1), (6, 2), (3, 3)))]
+    assert co.flushes == 1                     # 6+6+6 >= 16 flushed
+    assert tickets[0].ready and not tickets[3].ready
+    co.flush()
+    assert all(t.ready for t in tickets)
+    assert list(co.flush_sizes) == [3, 1] and sum(calls) == 4
+
+
+def test_coalescer_on_scored_callback():
+    seen = {}
+    co = RequestCoalescer(lambda gs: np.ones(len(gs), np.float32),
+                          node_budget=10**6,
+                          on_scored=lambda k, v: seen.__setitem__(k, v))
+    g = random_kernel(5, seed=1)
+    co.add(g.canonical_hash(), g)
+    co.flush()
+    assert seen == {g.canonical_hash(): 1.0}
+
+
+# ---------------------------------------------------------------------------
+# CostModelService
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def world():
+    graphs = [random_kernel(n, seed=n) for n in (5, 8, 12, 17, 23, 29)]
+    norm = F.fit_normalizer(graphs)
+    cfg = CostModelConfig(gnn="graphsage", reduction="column_wise",
+                          hidden_dim=16, opcode_embed_dim=8, dropout=0.0,
+                          max_nodes=MAX_NODES, adjacency="sparse")
+    params = cost_model_init(jax.random.key(0), cfg)
+    return {"graphs": graphs, "norm": norm, "cfg": cfg, "params": params}
+
+
+def _service(world, **kw):
+    return CostModelService(world["params"], world["cfg"], world["norm"],
+                            **kw)
+
+
+def test_service_hit_miss_accounting(world):
+    svc = _service(world)
+    graphs = world["graphs"]
+    svc.predict_many(graphs)
+    s1 = svc.stats()
+    assert s1.cache.misses == len(graphs) and s1.cache.hits == 0
+    svc.predict_many(graphs)
+    s2 = svc.stats()
+    assert s2.cache.hits == len(graphs)
+    assert s2.flushes == s1.flushes            # second call: pure cache
+    assert s2.hit_rate == pytest.approx(0.5)
+
+
+def test_service_dedups_within_request(world):
+    svc = _service(world)
+    g = world["graphs"][0]
+    out = svc.predict_many([g, g, g])
+    assert out.shape == (3,)
+    assert np.all(out == out[0])
+    s = svc.stats()
+    assert s.coalesced == 2 and s.flush_sizes == (1,)
+
+
+def test_service_eviction_at_capacity(world):
+    svc = _service(world, cache_capacity=3)
+    svc.predict_many(world["graphs"])          # 6 unique > capacity 3
+    s = svc.stats()
+    assert s.cache.size == 3
+    assert s.cache.evictions == len(world["graphs"]) - 3
+
+
+def test_service_matches_direct_path(world):
+    svc = _service(world)
+    preds = svc.predict_many(world["graphs"])
+    direct = predict_kernels(world["params"], world["cfg"], world["graphs"],
+                             world["norm"], max_nodes=MAX_NODES)
+    np.testing.assert_allclose(preds, direct, atol=1e-6)
+
+
+def test_service_dense_sparse_parity(world):
+    """Dense and sparse service backends agree under a fitted normalizer
+    (f32 summation-order effects stay below 1e-4 only with normalized
+    features)."""
+    sparse = _service(world, adjacency="sparse")
+    dense = _service(world, adjacency="dense", chunk=4)
+    ps = sparse.predict_many(world["graphs"])
+    pd = dense.predict_many(world["graphs"])
+    np.testing.assert_allclose(ps, pd, atol=1e-4)
+
+
+def test_service_submit_coalesces_across_requests(world):
+    svc = _service(world)
+    g0, g1, g2 = world["graphs"][:3]
+    r1 = svc.submit([g0, g1])
+    r2 = svc.submit([g1, g2])                  # g1 shared while in flight
+    assert svc.coalescer.pending == 3
+    out2 = r2.result()                         # one flush resolves both
+    out1 = r1.result()
+    s = svc.stats()
+    assert s.flushes == 1 and s.coalesced == 1
+    assert out1[1] == out2[0]
+
+
+def test_service_tile_scorer_and_runtime_predictor(world):
+    svc = _service(world)
+    kernel = world["graphs"][2]
+    tiles = [(4, 4), (8, 8), (16, 16)]
+    scores = svc.tile_scorer()(kernel, tiles)
+    assert scores.shape == (3,)
+    direct = svc.predict_many([kernel.with_tile(t) for t in tiles])
+    np.testing.assert_allclose(scores, direct)     # cached: bit-identical
+    rts = svc.runtime_predictor()(world["graphs"])
+    np.testing.assert_allclose(
+        rts, np.exp(svc.predict_many(world["graphs"])))
+
+
+def test_service_cost_fn_drop_above(world):
+    svc = _service(world)
+    big, small = world["graphs"][5], world["graphs"][0]
+    cost = svc.cost_fn(drop_above=small.num_nodes)
+    assert cost([big]) == 0.0
+    expected = float(np.exp(svc.predict(small)))
+    assert cost([small, big]) == pytest.approx(expected, rel=1e-6)
+
+
+def test_service_stats_surface(world):
+    svc = _service(world, node_budget=64)
+    svc.predict_many(world["graphs"])
+    svc.predict_many(world["graphs"][:3])
+    s = svc.stats()
+    assert s.requests == 2 and s.graphs == 9
+    assert s.latency_p99_ms >= s.latency_p50_ms > 0.0
+    assert s.buckets and all(0.0 < b.mean_node_occupancy <= 1.0
+                             for b in s.buckets.values())
+    assert sum(b.graphs for b in s.buckets.values()) == s.cache.misses
+    assert "hit_rate" in s.summary()
