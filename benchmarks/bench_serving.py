@@ -10,11 +10,20 @@ top-k re-ranking and annealing (`repro.serving.replay`) — two ways:
   * service — `CostModelService` (content-addressed cache + coalescer +
     bucketed sparse flushes).
 
-Both run on warm jit executables (a throwaway warmup pass compiles every
-bucket shape first). PASS requires the service to reach >=2x the direct
-throughput with max prediction delta <1e-4 (features go through a fitted
-FeatureNormalizer — unnormalized f32 features lose the tolerance to
-summation-order effects).
+Both run on warm jit executables: the benchmark itself replays the full
+query stream once per path before timing (each path can produce different
+BucketSpecs, so each warms its own) — without this the service run gets
+charged every bucket compile and can look slower than direct. PASS
+requires the service to reach >=2x the direct throughput with max
+prediction delta <1e-4 (features go through a fitted FeatureNormalizer —
+unnormalized f32 features lose the tolerance to summation-order effects).
+
+Margins (see BENCH_SCALE semantics in benchmarks/common.py): ~2.07x at
+BENCH_SCALE=0.5, so CI runs this benchmark unscaled. Since PR 3 the
+shared structural EncodeCache also accelerates the *direct* baseline
+(tile sweeps no longer re-encode per config), which narrows the
+full-scale margin from ~3.4x to ~2.6x — the gate measures caching of
+*predictions* + coalescing on top of cached *encodes*.
 
   PYTHONPATH=src python benchmarks/bench_serving.py
 """
@@ -42,6 +51,10 @@ SUBSET = 0.75
 
 
 def main() -> int:
+    if SCALE < 1.0:
+        print(f"[warn] BENCH_SCALE={SCALE}: the 2x gate margin is ~2.07x "
+              "at 0.5 — run unscaled for a binding verdict "
+              "(benchmarks/common.py)", file=sys.stderr)
     replay = build_tile_replay(NUM_PROGRAMS, max_configs=MAX_CONFIGS,
                                rounds=ROUNDS, subset=SUBSET, seed=0)
     max_nodes = max(g.num_nodes for r in replay.requests for g in r)

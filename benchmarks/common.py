@@ -5,8 +5,28 @@ imported from the assigned architectures) with the paper's two split
 methods. Trained cost models are cached under experiments/bench_cache keyed
 by a config hash so re-runs (and the §Perf loop) are incremental.
 
-Scale knobs: BENCH_SCALE env (default 1.0; quick CI = 0.3) scales program
-counts and training steps.
+## BENCH_SCALE semantics
+
+`BENCH_SCALE` (env, default 1.0) scales how much *work* a benchmark does —
+program/kernel counts, training steps, replay rounds — never the *size* of
+individual kernels or models, so per-item costs and compiled shapes stay
+representative at any scale. Guidelines:
+
+* Scaling changes gate *margins*: fewer items means less amortization of
+  cold caches and fixed overheads. A gate that must stay binding in CI
+  should either be run at full scale or hold its margin at the CI scale.
+  Concretely: `bench_serving.py`'s >=2x service-vs-direct gate has only a
+  ~2.07x margin at BENCH_SCALE=0.5 (and the PR-3 encode cache also speeds
+  up the *direct* baseline, full-scale margin ~2.6x), so CI runs it
+  unscaled; `bench_batching.py` and `bench_input_pipeline.py` keep wide
+  margins at 0.5 and run scaled down.
+* Benchmarks measuring steady-state throughput must warm jit executables
+  (and any caches whose steady state is warm) *inside* the benchmark
+  before timing — e.g. the serving bench replays the whole query stream
+  once per path first, otherwise one path gets charged every bucket
+  compile and the comparison is meaningless.
+* Anything below ~0.3 is smoke-test territory: numbers still print but
+  gates are not meaningful.
 """
 from __future__ import annotations
 
@@ -36,7 +56,7 @@ from repro.training.checkpoint import latest_step, restore_checkpoint, \
 from repro.training.optim import AdamWConfig
 from repro.training.trainer import CostModelTrainer, TrainerConfig
 
-SCALE = float(os.environ.get("BENCH_SCALE", "1.0"))
+SCALE = float(os.environ.get("BENCH_SCALE", "1.0"))   # see module docstring
 MAX_NODES = 48
 CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                          "bench_cache")

@@ -4,13 +4,16 @@ the assigned architectures, train/val/test splits, checkpointing + resume,
 JSONL metrics, periodic eval — then hand the model to both autotuners.
 
   PYTHONPATH=src python examples/train_cost_model.py [--steps 600]
-      [--adjacency dense|sparse]
+      [--adjacency dense|sparse] [--prefetch 2]
 
 --adjacency selects the batched-graph representation end-to-end (sampler,
 trainer, evaluation, autotuner): 'dense' pads each kernel to a [N, N]
 adjacency slot; 'sparse' packs kernels into bucketed flat node/edge buffers
 (segment-sum aggregation — same numerics, much higher throughput on
 mixed-size corpora; see DESIGN.md §4 and benchmarks/bench_batching.py).
+
+--prefetch encodes that many batches ahead on a background thread
+(byte-identical batch stream; DESIGN.md §9, 0 = synchronous).
 """
 import argparse
 import os
@@ -44,6 +47,9 @@ def main():
     ap.add_argument("--ckpt-dir", default="ckpts/fusion_model")
     ap.add_argument("--adjacency", choices=("dense", "sparse"),
                     default="dense")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="batches encoded ahead by a background thread "
+                         "(0 = synchronous)")
     args = ap.parse_args()
 
     # ---- data: synthetic families + imported architectures
@@ -79,6 +85,7 @@ def main():
                       log_every=100, ckpt_dir=args.ckpt_dir,
                       metrics_path=os.path.join(args.ckpt_dir,
                                                 "metrics.jsonl"),
+                      prefetch=args.prefetch,
                       optim=AdamWConfig(lr=2e-3)),
         sampler)
     res = trainer.run(eval_fn=eval_fn, eval_every=200)

@@ -43,10 +43,14 @@ def predict_kernels(params, model_cfg: CostModelConfig, graphs, normalizer,
 
     `adjacency` defaults to `model_cfg.adjacency`.
 
-    This is the *direct* (uncached) path; high-traffic clients should go
-    through `repro.serving.CostModelService`, which adds the
+    This is the *direct* path — no prediction cache; high-traffic clients
+    should go through `repro.serving.CostModelService`, which adds the
     content-addressed cache and request coalescing on top of the same
-    encoders (docs/SERVING.md).
+    encoders (docs/SERVING.md). Encoding itself still rides the shared
+    `features.EncodeCache` (DESIGN.md §9): a tile sweep over one kernel
+    pays the structural encode once (plus a tile-slice rewrite per
+    config), and the dense path's pad slots (`[part[-1]] * pad`) are
+    cache hits instead of fresh encodes.
     """
     if adjacency is None:
         adjacency = model_cfg.adjacency
@@ -108,6 +112,7 @@ def learned_tile_scorer(params, model_cfg, normalizer, *, max_nodes=64,
     predict = make_predict_fn(model_cfg)
 
     def scorer(kernel, tiles):
+        kernel.structural_digest()     # memoize once; tile variants share
         graphs = [kernel.with_tile(t) for t in tiles]
         return predict_kernels(params, model_cfg, graphs, normalizer,
                                max_nodes=max_nodes, chunk=chunk,

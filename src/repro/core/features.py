@@ -14,7 +14,11 @@ normalizer statistics are fit on the training set only (paper footnote 1).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import os
+import threading
+import weakref
+from collections import OrderedDict
+from dataclasses import dataclass, field
 from typing import Sequence
 
 import numpy as np
@@ -41,6 +45,37 @@ def _subvec(values: Sequence[int], k: int) -> np.ndarray:
     return v
 
 
+def _subvec_rows(seqs: Sequence[Sequence[int]], k: int) -> np.ndarray:
+    """Row-batched `_subvec`: one [len(seqs), k+3] array, no per-row numpy
+    allocations. Bit-identical to stacking `_subvec(s, k)` per row (the
+    values are small integers, exact in f64 regardless of reduction
+    order)."""
+    n = len(seqs)
+    out = np.zeros((n, k + 3), np.float64)
+    if n == 0:
+        return out
+    lens = np.fromiter((len(s) for s in seqs), np.int64, count=n)
+    L = int(lens.max())
+    if L == 0:
+        return out
+    total = int(lens.sum())
+    flat = np.fromiter((float(x) for s in seqs for x in s), np.float64,
+                       count=total)
+    vals = np.zeros((n, L), np.float64)
+    row = np.repeat(np.arange(n), lens)
+    starts = np.zeros((n,), np.int64)
+    np.cumsum(lens[:-1], out=starts[1:])
+    col = np.arange(total) - np.repeat(starts, lens)
+    vals[row, col] = flat
+    out[:, :min(L, k)] = vals[:, :k]
+    out[:, k] = vals.sum(axis=1)
+    mask = np.arange(L)[None, :] < lens[:, None]
+    out[:, k + 1] = np.where(lens > 0,
+                             np.where(mask, vals, 1.0).prod(axis=1), 0.0)
+    out[:, k + 2] = np.log1p(out[:, k + 1])
+    return out
+
+
 SHAPE_FEATS = SHAPE_SUBVEC + 3
 TILE_FEATS = TILE_SUBVEC + 3
 
@@ -59,6 +94,41 @@ TILE_SLICE = slice(0, TILE_FEATS)
 
 
 def node_features(g: KernelGraph) -> np.ndarray:
+    """Per-node scalar features, vectorized over nodes: one Python pass
+    collects the scalars, then whole columns are written at once — no
+    per-node `np.concatenate`/`np.array` churn. Matches
+    `node_features_reference` bit for bit."""
+    nodes = g.nodes
+    n_nodes = g.num_nodes
+    feats = np.empty((n_nodes, NODE_FEATURE_DIM), np.float64)
+    feats[:, :SHAPE_FEATS] = _subvec_rows([n.shape for n in nodes],
+                                          SHAPE_SUBVEC)
+    c = SHAPE_FEATS
+    feats[:, c] = [float(len(n.shape)) for n in nodes]          # rank
+    feats[:, c + 1] = [float(n.dtype_bytes) for n in nodes]
+    feats[:, c + 2] = 1.0                          # default row-major layout
+    feats[:, c + 3] = [1.0 if n.op is opset.PARAMETER else 0.0 for n in nodes]
+    feats[:, c + 4] = [1.0 if n.is_output else 0.0 for n in nodes]
+    feats[:, c + 5] = [float(len(n.inputs)) for n in nodes]
+    feats[:, c + 6] = g.fan_out()
+    c += 7
+    feats[:, c:c + 5] = _subvec_rows([n.reduced_dims for n in nodes], 2)
+    c += 5
+    feats[:, c:c + 5] = _subvec_rows(
+        [n.filter_size if n.op is opset.CONV else () for n in nodes], 2)
+    c += 5
+    feats[:, c] = [float(n.contract_dim) for n in nodes]
+    feats[:, c + 1] = np.log1p([n.flops() for n in nodes])
+    feats[:, c + 2] = np.log1p([float(n.bytes_out) for n in nodes])
+    feats[:, c + 3] = [1.0 if n.op.elementwise else 0.0 for n in nodes]
+    feats[:, c + 4] = [1.0 if n.op.transcendental else 0.0 for n in nodes]
+    return feats
+
+
+def node_features_reference(g: KernelGraph) -> np.ndarray:
+    """The original per-node-loop encoder. Kept as the equivalence oracle
+    for tests and as the baseline for `benchmarks/bench_input_pipeline.py`
+    — not used on any hot path."""
     n_nodes = g.num_nodes
     fan_out = g.fan_out()
     feats = np.zeros((n_nodes, NODE_FEATURE_DIM), np.float64)
@@ -166,6 +236,194 @@ class FeatureNormalizer:
 
 
 # ----------------------------------------------------------------------------
+# Encode-once structural cache (DESIGN.md §9)
+# ----------------------------------------------------------------------------
+@dataclass
+class EncodedKernel:
+    """The tile-independent ("structural") encoding of one kernel, computed
+    once and shared by every tile configuration of that kernel.
+
+    Node features, opcode ids, the unique edge list, and the kernel scalar
+    features minus the tile sub-vector are all pure functions of the graph
+    structure — only `TILE_SLICE` of the kernel features changes with
+    `KernelGraph.with_tile`. The cached arrays are read-only; consumers
+    copy into their own batch buffers.
+
+    Per-consumer memos hang off the entry so repeated encodes stay cheap:
+    a dense adjacency per `n_max`, and the normalized node features for
+    the most recent `FeatureNormalizer` (held weakly; normalizers are
+    fit once and never mutated — see `FeatureNormalizer.fit`).
+    """
+    key: bytes                     # structural_digest(order_sensitive=True)
+    opcodes: np.ndarray            # [n] int32
+    node_feats: np.ndarray         # [n, NODE_FEATURE_DIM] float64, raw
+    kernel_feats_base: np.ndarray  # [KERNEL_FEATURE_DIM] f64, TILE_SLICE = 0
+    edges: np.ndarray              # [e, 2] int32 unique (src, dst)
+    _adj: dict = field(default_factory=dict, init=False, repr=False)
+    _norm: tuple | None = field(default=None, init=False, repr=False)
+
+    @property
+    def num_nodes(self) -> int:
+        return self.opcodes.shape[0]
+
+    def kernel_feats(self, tile: Sequence[int] = (), *,
+                     include_static_perf: bool = True) -> np.ndarray:
+        """Assemble the per-config kernel feature vector: copy the cached
+        structural part and rewrite only `TILE_SLICE` (and zero
+        `STATIC_PERF_SLICE` when the ablation asks for it). Bit-identical
+        to `kernel_features(g.with_tile(tile), ...)`."""
+        kf = self.kernel_feats_base.copy()
+        if len(tile):
+            kf[TILE_SLICE] = _subvec(tile, TILE_SUBVEC)
+        if not include_static_perf:
+            kf[STATIC_PERF_SLICE] = 0.0
+        return kf
+
+    def normalized_node_feats(self, normalizer: "FeatureNormalizer | None"
+                              ) -> np.ndarray:
+        """Node features through `normalizer` (raw when None), memoized for
+        the last normalizer seen (training/eval/serving each use one)."""
+        if normalizer is None:
+            return self.node_feats
+        memo = self._norm
+        if memo is not None and memo[0]() is normalizer:
+            return memo[1]
+        arr = normalizer.transform_node(self.node_feats)
+        arr.setflags(write=False)
+        self._norm = (weakref.ref(normalizer), arr)
+        return arr
+
+    def dense_adj(self, n_max: int) -> np.ndarray:
+        """Dense directed adjacency padded/truncated to `n_max`, memoized
+        per width. Same semantics as `adjacency(g, n_max)`."""
+        a = self._adj.get(n_max)
+        if a is None:
+            a = np.zeros((n_max, n_max), np.float32)
+            e = self.edges
+            if e.size:
+                keep = (e[:, 0] < n_max) & (e[:, 1] < n_max)
+                a[e[keep, 1], e[keep, 0]] = 1.0
+            a.setflags(write=False)
+            self._adj[n_max] = a
+        return a
+
+
+def _build_encoded(g: KernelGraph) -> EncodedKernel:
+    ops = opcode_ids(g)
+    nf = node_features(g)
+    kf = kernel_features(g, include_tile=False)
+    edges = np.asarray(g.unique_edges(), np.int32).reshape(-1, 2)
+    for a in (ops, nf, kf, edges):
+        a.setflags(write=False)
+    return EncodedKernel(key=g.structural_digest(order_sensitive=True),
+                         opcodes=ops, node_feats=nf, kernel_feats_base=kf,
+                         edges=edges)
+
+
+@dataclass(frozen=True)
+class EncodeCacheStats:
+    hits: int
+    misses: int
+    evictions: int
+    size: int
+    capacity: int
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class EncodeCache:
+    """Bounded, thread-safe LRU of `EncodedKernel` entries keyed by
+    `KernelGraph.structural_digest(order_sensitive=True)` — the node-order-
+    sensitive structural identity, so every `with_tile` variant of a kernel
+    maps to one entry while reordered (even isomorphic) node lists encode
+    separately (feature rows follow node order).
+
+    Capacity 0 disables storage (every call encodes fresh). The process-
+    wide default cache is sized by the `REPRO_ENCODE_CACHE` env var
+    (default 4096 entries); swap it with `set_encode_cache`.
+
+    >>> from repro.core import opset
+    >>> from repro.core.graph import KernelGraph, Node
+    >>> g = KernelGraph([Node(opset.PARAMETER, (8, 8), is_output=True)])
+    >>> c = EncodeCache(4)
+    >>> a = c.get_or_encode(g)
+    >>> b = c.get_or_encode(g.with_tile((8, 8)))   # tile variant: same entry
+    >>> a is b, c.stats().hits, c.stats().misses
+    (True, 1, 1)
+    >>> bool(np.any(a.kernel_feats((8, 8))[TILE_SLICE]
+    ...             != a.kernel_feats(())[TILE_SLICE]))
+    True
+    """
+
+    def __init__(self, capacity: int = 4096):
+        self.capacity = int(capacity)
+        self._entries: OrderedDict[bytes, EncodedKernel] = OrderedDict()
+        self._lock = threading.Lock()
+        self._hits = self._misses = self._evictions = 0
+
+    def get_or_encode(self, g: KernelGraph) -> EncodedKernel:
+        if self.capacity <= 0:
+            with self._lock:
+                self._misses += 1
+            return _build_encoded(g)
+        key = g.structural_digest(order_sensitive=True)
+        with self._lock:
+            enc = self._entries.get(key)
+            if enc is not None:
+                self._hits += 1
+                self._entries.move_to_end(key)
+                return enc
+            self._misses += 1
+        enc = _build_encoded(g)          # encode outside the lock
+        with self._lock:
+            racer = self._entries.get(key)
+            if racer is not None:        # another thread encoded it first
+                return racer
+            self._entries[key] = enc
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self._evictions += 1
+        return enc
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._hits = self._misses = self._evictions = 0
+
+    def stats(self) -> EncodeCacheStats:
+        with self._lock:
+            return EncodeCacheStats(self._hits, self._misses,
+                                    self._evictions, len(self._entries),
+                                    self.capacity)
+
+
+_ENCODE_CACHE = EncodeCache(int(os.environ.get("REPRO_ENCODE_CACHE", "4096")))
+
+
+def encode_cache() -> EncodeCache:
+    """The process-wide structural-encode cache all encoders share."""
+    return _ENCODE_CACHE
+
+
+def set_encode_cache(cache: EncodeCache) -> EncodeCache:
+    """Swap the process-wide cache (benchmarks/tests); returns the old one.
+    `EncodeCache(0)` effectively disables caching."""
+    global _ENCODE_CACHE
+    old = _ENCODE_CACHE
+    _ENCODE_CACHE = cache
+    return old
+
+
+def encode_structural(g: KernelGraph,
+                      cache: EncodeCache | None = None) -> EncodedKernel:
+    """The cached tile-independent encoding of `g` (see `EncodedKernel`)."""
+    return (cache if cache is not None else _ENCODE_CACHE).get_or_encode(g)
+
+
+# ----------------------------------------------------------------------------
 # Batched device encoding
 # ----------------------------------------------------------------------------
 @dataclass
@@ -202,15 +460,23 @@ _jtu.register_pytree_node(GraphBatch, _graphbatch_flatten, _graphbatch_unflatten
 
 def encode_graph(g: KernelGraph, n_max: int,
                  normalizer: FeatureNormalizer | None = None,
-                 *, include_static_perf: bool = True) -> dict:
-    """Encode one kernel to padded arrays (raw, unnormalized by default)."""
-    n = min(g.num_nodes, n_max)
+                 *, include_static_perf: bool = True,
+                 cache: EncodeCache | None = None) -> dict:
+    """Encode one kernel to padded arrays (raw, unnormalized by default).
+
+    The tile-independent work comes from the structural `EncodeCache`
+    (process default unless `cache` is given); per call only the tile
+    sub-vector is rewritten and the padded copies made. The returned
+    "adj" array is the cache's read-only memo — copy before mutating.
+    """
+    enc = encode_structural(g, cache)
+    n = min(enc.num_nodes, n_max)
     ops = np.zeros((n_max,), np.int32)
-    ops[:n] = opcode_ids(g)[:n]
-    nf_raw = node_features(g)[:n]
-    kf_raw = kernel_features(g, include_static_perf=include_static_perf)
+    ops[:n] = enc.opcodes[:n]
+    nf_raw = enc.normalized_node_feats(normalizer)[:n]
+    kf_raw = enc.kernel_feats(g.tile_size,
+                              include_static_perf=include_static_perf)
     if normalizer is not None:
-        nf_raw = normalizer.transform_node(nf_raw)
         kf_raw = normalizer.transform_kernel(kf_raw)
     nf = np.zeros((n_max, NODE_FEATURE_DIM), np.float32)
     nf[:n] = nf_raw
@@ -219,7 +485,7 @@ def encode_graph(g: KernelGraph, n_max: int,
     return {
         "opcodes": ops,
         "node_feats": nf,
-        "adj": adjacency(g, n_max),
+        "adj": enc.dense_adj(n_max),
         "node_mask": mask,
         "kernel_feats": kf_raw.astype(np.float32),
     }
@@ -334,24 +600,23 @@ def encode_sparse_batch(graphs: Sequence[KernelGraph],
 
     n_off = e_off = 0
     for gi, g in enumerate(graphs):
-        n = g.num_nodes
-        opcodes[n_off:n_off + n] = opcode_ids(g)
-        nf_raw = node_features(g)
-        kf_raw = kernel_features(g, include_static_perf=include_static_perf)
+        enc = encode_structural(g)
+        n = enc.num_nodes
+        opcodes[n_off:n_off + n] = enc.opcodes
+        kf_raw = enc.kernel_feats(g.tile_size,
+                                  include_static_perf=include_static_perf)
         if normalizer is not None:
-            nf_raw = normalizer.transform_node(nf_raw)
             kf_raw = normalizer.transform_kernel(kf_raw)
-        nf[n_off:n_off + n] = nf_raw
+        nf[n_off:n_off + n] = enc.normalized_node_feats(normalizer)
         node_mask[n_off:n_off + n] = 1.0
         graph_ids[n_off:n_off + n] = gi
         kf[gi] = kf_raw
         graph_mask[gi] = 1.0
         gather_idx[gi, :n] = np.arange(n_off, n_off + n, dtype=np.int32)
         gather_mask[gi, :n] = 1.0
-        edges = g.unique_edges()
-        if edges:
-            arr = np.asarray(edges, np.int32)
-            k = len(edges)
+        arr = enc.edges
+        if arr.size:
+            k = arr.shape[0]
             edge_src[e_off:e_off + k] = arr[:, 0] + n_off
             edge_dst[e_off:e_off + k] = arr[:, 1] + n_off
             edge_mask[e_off:e_off + k] = 1.0

@@ -14,6 +14,7 @@ from repro.data.batching import (
     iter_packed_batches,
     pack_graphs,
 )
+from repro.data.prefetch import Prefetcher
 from repro.data.synthetic import FAMILIES, generate_corpus, generate_program,\
     random_kernel
 from repro.data.tile_dataset import enumerate_tiles, build_tile_dataset
@@ -28,5 +29,5 @@ __all__ = [
     "enumerate_tiles", "build_tile_dataset", "build_fusion_dataset",
     "split_programs", "kernel_hash", "BalancedSampler", "TileBatchSampler",
     "BucketSpec", "bucket_for", "encode_packed", "iter_packed_batches",
-    "pack_graphs",
+    "pack_graphs", "Prefetcher",
 ]

@@ -14,6 +14,12 @@ Both samplers encode each draw with `adjacency='dense'` (padded GraphBatch,
 truncated at max_nodes) or `adjacency='sparse'` (packed SparseGraphBatch —
 no per-graph padding or truncation; capacities pow2-bucketed so jit sees a
 bounded set of shapes). See DESIGN.md §4.
+
+Because `batch(step)` is pure, both samplers compose with
+`repro.data.prefetch.Prefetcher` (encode-ahead on a background thread;
+`TrainerConfig.prefetch` enables it) without changing the batch stream,
+and every draw's structural encode is served by the `features.EncodeCache`
+— a tile sweep re-encodes only the tile sub-vector (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -98,6 +104,11 @@ class TileBatchSampler:
         for ki in range(self.kernels_per_batch):
             prog = self._programs[int(rng.integers(len(self._programs)))]
             rec = self.records[int(rng.choice(self._by_program[prog]))]
+            rec.kernel.structural_digest()   # memoize node digests + edge
+            rec.kernel.unique_edges()        # set once: every with_tile
+            #   draw below shares them, so the encode cache's key costs one
+            #   top-level hash per variant and the sparse pack-sizing pass
+            #   (bucket_for's edge counts) reuses one edge list
             n_cfg = len(rec.tiles)
             take = min(self.configs_per_kernel, n_cfg)
             idx = rng.choice(n_cfg, take, replace=False)
@@ -106,11 +117,15 @@ class TileBatchSampler:
                 targets.append(float(rec.runtimes[int(j)]))
                 groups.append(ki)
                 valid.append(1.0)
-            for _ in range(self.configs_per_kernel - take):   # pad group
-                graphs.append(rec.kernel.with_tile(rec.tiles[0]))
-                targets.append(float(rec.runtimes[0]))
-                groups.append(ki)
-                valid.append(0.0)
+            if take < self.configs_per_kernel:                # pad group
+                # one shared graph object for every pad slot (valid=0.0):
+                # it is encoded once, not re-encoded per slot
+                pad_graph = rec.kernel.with_tile(rec.tiles[0])
+                for _ in range(self.configs_per_kernel - take):
+                    graphs.append(pad_graph)
+                    targets.append(float(rec.runtimes[0]))
+                    groups.append(ki)
+                    valid.append(0.0)
         gb = _encode(graphs, self.adjacency, self.max_nodes, self.normalizer)
         return TileBatch(gb, np.asarray(targets, np.float32),
                          np.asarray(groups, np.int32),

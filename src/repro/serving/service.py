@@ -6,6 +6,10 @@ Composition of the serving pipeline:
       └─ cache lookup (canonical_hash)          repro.serving.cache
          └─ miss → coalescer ticket (deduped)   repro.serving.coalescer
             └─ flush → pack + bucket + encode   repro.data.batching
+               │    (structural features from   repro.core.features
+               │     the shared EncodeCache —   .encode_cache(); tile
+               │     sweeps re-encode only      sweeps over one kernel
+               │     TILE_SLICE; DESIGN.md §9)  hit one cached entry
                └─ one jitted apply per bucket   repro.core.model
 
 A service instance is bound to one frozen (params, model config,
@@ -161,6 +165,9 @@ class CostModelService:
         self._latencies_ms: deque[float] = deque(maxlen=4096)
 
     # --- scoring backends (one flush = one call) ---------------------------
+    # Both backends encode through the process-wide `features.EncodeCache`:
+    # a prediction-cache miss for a new tile of an already-seen kernel
+    # costs a tile-slice rewrite, not a full structural re-encode.
     def _score_sparse(self, graphs: Sequence[KernelGraph]) -> np.ndarray:
         out = np.zeros((len(graphs),), np.float32)
         for pack in pack_graphs(graphs, self.node_budget):

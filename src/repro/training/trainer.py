@@ -16,6 +16,11 @@ jit step caches one executable per batch shape, so sparse batches must come
 from the pow2-bucketed batcher in `repro.data.batching` to bound
 recompilation. Sparse batches have no uniform leading batch dim, so the
 int8 compressed-DP path (which shards on it) is dense-only.
+
+With `TrainerConfig.prefetch > 0` the sampler is wrapped in a
+`repro.data.prefetch.Prefetcher`: a background thread encodes that many
+batches ahead of the jitted step (optionally staging them on device), with
+a byte-identical batch stream and restart-safe determinism (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -52,6 +57,12 @@ class TrainerConfig:
     metrics_path: str = ""
     compress_grads: bool = False          # int8 + error feedback over DP axis
     data_axis: str = "data"
+    # async input pipeline (DESIGN.md §9): number of batches a background
+    # thread encodes ahead of the jitted step (0 = synchronous encode). The
+    # delivered batch stream is byte-identical either way; `.run` owns the
+    # worker's lifecycle (started per run, stopped on exit/interrupt).
+    prefetch: int = 0
+    prefetch_device_put: bool = False     # also overlap host->device copies
     optim: AdamWConfig = field(default_factory=AdamWConfig)
 
 
@@ -222,10 +233,24 @@ class CostModelTrainer:
         if resume:
             self.maybe_resume()
         self._install_signal_handlers()
+        sampler = self.sampler
+        if cfg.prefetch:
+            from repro.data.prefetch import Prefetcher
+            sampler = Prefetcher(self.sampler, depth=cfg.prefetch,
+                                 start_step=self.step,
+                                 device_put=cfg.prefetch_device_put)
+        try:
+            return self._run_loop(sampler, total, eval_fn, eval_every)
+        finally:
+            if sampler is not self.sampler:
+                sampler.close()
+
+    def _run_loop(self, sampler, total: int, eval_fn, eval_every) -> dict:
+        cfg = self.cfg
         t0 = time.time()
         last_loss = float("nan")
         while self.step < total and not self._stop:
-            b = self.sampler.batch(self.step)
+            b = sampler.batch(self.step)
             rng = jax.random.fold_in(jax.random.key(cfg.seed + 1), self.step)
             group_ids = getattr(b, "group_ids",
                                 np.zeros_like(b.targets, np.int32))
