@@ -1,0 +1,143 @@
+"""Joint tile + fusion autotuning across the LM-architecture zoo under
+one fixed hardware budget (the paper's §7 scenario at zoo scale;
+DESIGN.md §10).
+
+For each imported architecture graph (`repro.configs` via
+`core.hlo_import`), one `BudgetMeter` spans the whole scenario:
+
+  1. fusion search — population-batched simulated annealing against the
+     learned model (one coalesced service flush per temperature step),
+     then hardware re-ranking of the best configs within the budget;
+  2. tile search  — the fused kernels' tile candidates scored by a
+     `CascadeEstimator` (analytical prune → learned refine, half the
+     learned-model queries), top-k verified on whatever budget remains.
+
+The final chosen configuration is measured once at the end ("deploy and
+observe") — that measurement is reporting, not tuning, and is not
+charged against the budget.
+
+  PYTHONPATH=src python examples/autotune_zoo.py
+  PYTHONPATH=src python examples/autotune_zoo.py \\
+      --archs yi-9b musicgen-large --budget-s 120 --population 16
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.autotuner import autotune_program_tiles, \
+    simulated_annealing_fusion
+from repro.core.evaluate import make_predict_fn
+from repro.core.hlo_import import import_arch_program
+from repro.core.model import CostModelConfig, cost_model_init
+from repro.core.simulator import TPUSimulator
+from repro.data.fusion import apply_fusion, default_fusion
+from repro.data.synthetic import generate_corpus
+from repro.data.tile_dataset import build_tile_dataset, fit_tile_normalizer
+from repro.data.sampler import TileBatchSampler
+from repro.search import AnalyticalEstimator, BudgetMeter, \
+    CascadeEstimator, LearnedEstimator
+from repro.training.optim import AdamWConfig
+from repro.training.trainer import CostModelTrainer, TrainerConfig
+
+MAX_NODES = 48
+
+parser = argparse.ArgumentParser(description=__doc__)
+parser.add_argument("--archs", nargs="+",
+                    default=["musicgen-large", "yi-9b",
+                             "granite-moe-3b-a800m"])
+parser.add_argument("--budget-s", type=float, default=90.0,
+                    help="hardware budget per architecture (simulated s)")
+parser.add_argument("--eval-seconds", type=float, default=2.0)
+parser.add_argument("--train-steps", type=int, default=250,
+                    help="cost-model training steps (synthetic corpus)")
+parser.add_argument("--population", type=int, default=8)
+parser.add_argument("--model-steps", type=int, default=160,
+                    help="annealing proposals (split across the population)")
+args = parser.parse_args()
+
+sim = TPUSimulator()
+
+# --- a small learned model, trained on the synthetic corpus --------------
+print(f"training cost model ({args.train_steps} steps on synthetic corpus)")
+corpus = generate_corpus(12, seed=0)
+tds = build_tile_dataset(corpus, sim, max_configs_per_kernel=12)
+norm = fit_tile_normalizer(tds.records)
+cfg = CostModelConfig(gnn="graphsage", reduction="column_wise",
+                      hidden_dim=48, opcode_embed_dim=16, dropout=0.0,
+                      max_nodes=MAX_NODES, adjacency="sparse")
+sampler = TileBatchSampler(tds.records, norm, kernels_per_batch=3,
+                           configs_per_kernel=8, max_nodes=MAX_NODES)
+trainer = CostModelTrainer(
+    cfg, TrainerConfig(task="tile", steps=args.train_steps, ckpt_every=0,
+                       log_every=100,
+                       optim=AdamWConfig(lr=2e-3, schedule="constant")),
+    sampler)
+trainer.run(args.train_steps, resume=False)
+params = trainer.params
+predict_fn = make_predict_fn(cfg)
+
+for arch in args.archs:
+    prog = import_arch_program(arch)
+    meter = BudgetMeter(budget_s=args.budget_s,
+                        eval_seconds=args.eval_seconds)
+    learned = LearnedEstimator.from_params(params, cfg, norm,
+                                           max_nodes=MAX_NODES,
+                                           node_budget=1024,
+                                           predict_fn=predict_fn)
+
+    # 1) fusion: population-batched anneal + hardware re-rank capped so
+    # the shared budget keeps room for the tile phase
+    r_fus = simulated_annealing_fusion(
+        prog, sim, estimator=learned, meter=meter,
+        population=args.population,
+        model_steps=max(args.model_steps // args.population, 1),
+        rerank_top=max(int(args.budget_s / args.eval_seconds) // 3, 1),
+        seed=0)
+    kernels = apply_fusion(prog, r_fus.best_decision)
+
+    # 2) tiles: cascade scoring, top-k verified on the remaining budget —
+    # most expensive kernels first (free analytical ordering, one
+    # batched call), so the leftover hardware time goes where the
+    # runtime is
+    order = np.argsort(-AnalyticalEstimator().estimate(kernels))
+    kernels = [kernels[int(i)] for i in order]
+    refine = LearnedEstimator.from_params(params, cfg, norm,
+                                          max_nodes=MAX_NODES,
+                                          node_budget=1024,
+                                          predict_fn=predict_fn)
+    cascade = CascadeEstimator([AnalyticalEstimator(), refine], keep=0.5)
+    r_tile = autotune_program_tiles(kernels, sim, scorer=None,
+                                    estimator=cascade, top_k=4,
+                                    max_configs=12, meter=meter,
+                                    exhaustive_truth=False)
+
+    # deploy-and-observe: a verified tile replaces the compiler default
+    # only if its (already budget-charged) measurement beats it — the
+    # default is always available as a fallback, like the fusion search
+    tuned = improved = 0.0
+    for k, r in zip(kernels, r_tile.results):
+        base = sim.measure(k)
+        best = min(base, r.chosen_runtime) if r.hardware_evals else base
+        improved += base - best
+        tuned += best
+    verified = sum(1 for r in r_tile.results if r.hardware_evals)
+    total_candidates = sum(r.candidates for r in r_tile.results)
+
+    print(f"\n{prog.name}: {prog.num_nodes} nodes -> "
+          f"{len(kernels)} fused kernels")
+    print(f"  default fusion: {r_fus.default_runtime:.3e}s; "
+          f"fusion search {r_fus.speedup:.3f}x "
+          f"({r_fus.model_evals} model evals, "
+          f"{r_fus.hardware_evals} hw evals)")
+    print(f"  tile cascade: {verified}/{len(kernels)} kernels verified, "
+          f"{refine.queries}/{total_candidates} learned queries "
+          f"({cascade.stages[0].queries} analytical)")
+    print(f"  tuned runtime: {tuned:.3e}s "
+          f"({r_fus.default_runtime / max(tuned, 1e-30):.3f}x vs default); "
+          f"budget {meter.spent_s:.0f}/{args.budget_s:.0f}s "
+          f"({meter.evals} hw evals)")
+    assert meter.spent_s <= args.budget_s + 1e-9

@@ -6,6 +6,11 @@
   hardware-minutes budget; the learned model pre-screens candidates on CPU
   so scarce accelerator time is spent only on the most promising configs
   (§7.3).
+
+Both are thin wrappers over the budgeted search engine in `repro.search`
+(estimators, `BudgetMeter`, `topk_rerank`, population `anneal`) — pass
+`estimator=` / `meter=` for batched scoring and shared hardware budgets
+(DESIGN.md §10).
 """
 from repro.autotuner.tile_autotuner import (
     TileTuneResult,

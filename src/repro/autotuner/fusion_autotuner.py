@@ -1,5 +1,6 @@
 """Fusion autotuner: simulated annealing with a hardware-minutes budget
-(paper §7.3).
+(paper §7.3) — a thin wrapper over the budgeted search engine
+(`repro.search`, DESIGN.md §10).
 
 Two operating modes, mirroring Fig. 5:
   * 'HW m'            — anneal directly against hardware measurements for an
@@ -9,8 +10,16 @@ Two operating modes, mirroring Fig. 5:
     hardware budget.
 
 Hardware time is *simulated* wall-clock: each hardware evaluation of a
-config charges its compile+run cost to the budget (`eval_seconds`), so the
-budget comparison is apples-to-apples without real TPUs.
+config charges its compile+run cost to a `BudgetMeter` (`eval_seconds`
+per eval) **as it happens**, inside the annealing loop — the search stops
+when the next eval no longer fits, so `hardware_seconds_used` can never
+overshoot `hardware_budget_s`.
+
+`population > 1` proposes that many flips per temperature step and scores
+them in ONE batched flush through the estimator (`CostEstimator
+.program_costs` → one coalesced service call) instead of one-by-one —
+the model-scoring-throughput win gated by benchmarks/bench_autotune.py.
+`population=1` reproduces the classic sequential annealer bit-exactly.
 """
 from __future__ import annotations
 
@@ -23,11 +32,14 @@ from repro.core.graph import KernelGraph
 from repro.core.simulator import TPUSimulator
 from repro.data.fusion import (
     FusionDecision,
+    FusionMaterializer,
     apply_fusion,
     default_fusion,
     fusable_edges,
     random_fusion,
 )
+from repro.search import BudgetMeter, CostEstimator, HardwareEstimator, \
+    anneal
 
 CostFn = Callable[[Sequence[KernelGraph]], float]
 
@@ -38,9 +50,13 @@ def model_cost_fn(params, model_cfg, normalizer, *, max_nodes: int = 64,
                   cache_capacity: int = 65536) -> CostFn:
     """Program cost under the learned model: Σ exp(predicted log-runtime).
 
-    Scores through the prediction service: neighboring annealing steps
-    share most of their kernels, so the content-addressed cache turns the
-    per-step cost into scoring only the few kernels the last flip changed.
+    Built on `search.LearnedEstimator.from_params` — the one home of the
+    service-construction kwargs. Scores through the prediction service:
+    neighboring annealing steps share most of their kernels, so the
+    content-addressed cache turns the per-step cost into scoring only the
+    few kernels the last flip changed. (To also batch across a
+    `population`, pass the estimator itself via
+    `simulated_annealing_fusion(..., estimator=...)` instead.)
 
     Representation follows `model_cfg.adjacency`. The dense path must drop
     kernels above `max_nodes` (its padded slots truncate them anyway); the
@@ -48,31 +64,14 @@ def model_cost_fn(params, model_cfg, normalizer, *, max_nodes: int = 64,
     per-graph cap, which also removes a systematic bias of the dense
     annealer objective on large fusion groups.
     """
-    if service is None and cache_capacity:
-        from repro.serving import CostModelService
-        service = CostModelService(params, model_cfg, normalizer,
-                                   max_nodes=max_nodes, chunk=chunk,
-                                   node_budget=node_budget,
-                                   predict_fn=predict_fn,
-                                   cache_capacity=cache_capacity)
-    if service is not None:
-        drop = max_nodes if service.adjacency == "dense" else None
-        return service.cost_fn(drop_above=drop)
-
-    from repro.core.evaluate import make_predict_fn, predict_kernels
-
-    predict = predict_fn or make_predict_fn(model_cfg)
-
-    def cost(kernels: Sequence[KernelGraph]) -> float:
-        if model_cfg.adjacency == "dense":
-            kernels = [k for k in kernels if k.num_nodes <= max_nodes]
-        if not kernels:
-            return 0.0
-        s = predict_kernels(params, model_cfg, kernels, normalizer,
-                            max_nodes=max_nodes, chunk=chunk,
-                            predict_fn=predict, node_budget=node_budget)
-        return float(np.sum(np.exp(s)))
-    return cost
+    from repro.search import LearnedEstimator
+    est = LearnedEstimator.from_params(params, model_cfg, normalizer,
+                                       max_nodes=max_nodes, chunk=chunk,
+                                       node_budget=node_budget,
+                                       predict_fn=predict_fn,
+                                       service=service,
+                                       cache_capacity=cache_capacity)
+    return est.cost_fn()
 
 
 @dataclass
@@ -90,100 +89,126 @@ class FusionSearchResult:
         return self.default_runtime / max(self.best_runtime, 1e-30)
 
 
-def _anneal(program: KernelGraph, start: FusionDecision, cost: CostFn,
-            *, steps: int, rng: np.random.Generator,
-            t0: float = 0.1, t1: float = 1e-3,
-            max_group: int = 48) -> tuple[list[tuple[float, FusionDecision]],
-                                          int]:
-    """Simulated annealing over edge decisions; returns visited
-    (cost, decision) pairs sorted best-first, and #cost evals."""
-    n_edges = len(fusable_edges(program))
-    cur = start
-    cur_cost = cost(apply_fusion(program, cur, max_group))
-    visited: dict[tuple, float] = {cur.fuse: cur_cost}
-    evals = 1
-    best = [(cur_cost, cur)]
-    for i in range(steps):
-        if n_edges == 0:
-            break
-        temp = t0 * (t1 / t0) ** (i / max(steps - 1, 1))
+def _propose_flips(n_edges: int):
+    """The classic move: flip one edge, sometimes two (30%)."""
+    def propose(cur: FusionDecision,
+                rng: np.random.Generator) -> FusionDecision:
         flips = 1 + int(rng.random() < 0.3)
         cand = cur
         for _ in range(flips):
             cand = cand.flip(int(rng.integers(n_edges)))
-        if cand.fuse in visited:
-            cand_cost = visited[cand.fuse]
-        else:
-            cand_cost = cost(apply_fusion(program, cand, max_group))
-            visited[cand.fuse] = cand_cost
-            evals += 1
-            best.append((cand_cost, cand))
-        accept = cand_cost < cur_cost or \
-            rng.random() < np.exp(-(cand_cost - cur_cost) /
-                                  max(temp * cur_cost, 1e-30))
-        if accept:
-            cur, cur_cost = cand, cand_cost
-    best.sort(key=lambda x: x[0])
-    return best, evals
+        return cand
+    return propose
 
 
 def simulated_annealing_fusion(
         program: KernelGraph, sim: TPUSimulator, *,
         model_cost: CostFn | None = None,
+        estimator: CostEstimator | None = None,
         hardware_budget_s: float = 60.0,
         model_steps: int = 300,
         eval_seconds: float = 2.0,
         seed: int = 0,
         start: str = "default",
-        max_group: int = 48) -> FusionSearchResult:
+        max_group: int = 48,
+        population: int = 1,
+        meter: BudgetMeter | None = None,
+        rerank_top: int | None = None) -> FusionSearchResult:
     """Search fusion configs for one program.
 
-    model_cost=None  => 'HW m' mode (anneal on hardware directly).
-    model_cost given => 'Cost model + HW': anneal on the model, then spend
-    the hardware budget re-ranking the model's best configs.
+    Neither model_cost nor estimator => 'HW m' mode (anneal on hardware
+    directly, budget enforced per-eval inside the loop).
+    model_cost (a `CostFn`) or estimator (a `CostEstimator`; enables
+    population batching) => 'Cost model + HW': anneal on the model, then
+    spend the hardware budget re-ranking the model's best configs.
+
+    Pass a shared `meter` to budget several searches jointly (e.g. the
+    cross-scenario driver in examples/autotune_zoo.py); by default a
+    fresh meter with `hardware_budget_s` / `eval_seconds` is used.
+    `rerank_top` caps how many model-ranked configs the hardware re-rank
+    may verify (default: whatever the budget affords) — set it when a
+    shared meter must keep budget for later searches. The
+    compiler-default config measurement is the baseline, not tuning, and
+    is not charged.
     """
+    if model_cost is not None and estimator is not None:
+        raise ValueError("pass model_cost or estimator, not both")
     rng = np.random.default_rng(seed)
     start_dec = default_fusion(program) if start == "default" \
         else random_fusion(program, rng)
-    hw_cost: CostFn = lambda kernels: sim.measure_program(kernels)
+    if meter is None:
+        meter = BudgetMeter(budget_s=hardware_budget_s,
+                            eval_seconds=eval_seconds)
+    evals0, seconds0 = meter.evals, meter.spent_s
+    hw = HardwareEstimator(sim, meter=meter)
+    n_edges = len(fusable_edges(program))
+    propose = _propose_flips(n_edges)
+    # one memoized materializer per search: candidates share almost all
+    # groups, so kernel construction + content hashing is paid once per
+    # unique group, not once per candidate
+    materialize = FusionMaterializer(program, max_group)
 
-    default_runtime = hw_cost(apply_fusion(program, default_fusion(program),
-                                           max_group))
-    hw_evals = 0
-    hw_seconds = 0.0
+    default_runtime = sim.measure_program(
+        materialize(default_fusion(program)))
     model_evals = 0
     trace: list[float] = []
 
-    if model_cost is None:
-        # anneal directly on hardware until the budget runs out
-        budget_steps = max(int(hardware_budget_s / eval_seconds), 1)
-        visited, evals = _anneal(program, start_dec, hw_cost,
-                                 steps=budget_steps, rng=rng,
-                                 max_group=max_group)
-        hw_evals = evals
-        hw_seconds = evals * eval_seconds
-        best_cost, best_dec = visited[0]
-        trace = [c for c, _ in visited[:20]]
+    if model_cost is None and estimator is None:
+        # anneal directly on hardware; the meter stops the loop. The step
+        # cap mirrors the meter's actual eval capacity (a shared meter
+        # may afford more than this call's hardware_budget_s default);
+        # an unbounded meter falls back to the budget argument.
+        budget_steps = max(meter.affordable(1 << 20), 1)
+        if budget_steps >= 1 << 20:
+            budget_steps = max(int(hardware_budget_s / eval_seconds), 1)
+        res = anneal(
+            start_dec, propose=propose,
+            cost_many=lambda decs: [hw.measure_program(materialize(d))
+                                    for d in decs],
+            steps=budget_steps if n_edges else 0, rng=rng,
+            key=lambda d: d.fuse, meter=meter)
+        if res.visited:
+            best_cost, best_dec = res.best
+            trace = [c for c, _ in res.visited[:20]]
+        else:                                  # budget afforded nothing
+            best_cost, best_dec = float("inf"), start_dec
     else:
         # anneal on the model (free), validate top configs on hardware
-        visited, model_evals = _anneal(program, start_dec, model_cost,
-                                       steps=model_steps, rng=rng,
-                                       max_group=max_group)
-        top = visited[:max(int(hardware_budget_s / eval_seconds), 1)]
+        if estimator is not None:
+            drop = getattr(estimator, "max_nodes", None) \
+                if getattr(estimator, "adjacency", None) == "dense" else None
+
+            def cost_many(decs: list[FusionDecision]) -> np.ndarray:
+                groups = []
+                for d in decs:
+                    ks = materialize(d)
+                    if drop is not None:
+                        ks = [k for k in ks if k.num_nodes <= drop]
+                    groups.append(ks)
+                return estimator.program_costs(groups)   # ONE batched flush
+        else:
+            def cost_many(decs: list[FusionDecision]) -> list[float]:
+                return [model_cost(materialize(d)) for d in decs]
+
+        res = anneal(start_dec, propose=propose, cost_many=cost_many,
+                     steps=model_steps if n_edges else 0, rng=rng,
+                     population=population, key=lambda d: d.fuse)
+        model_evals = res.evals
         best_cost, best_dec = float("inf"), start_dec
+        top = res.visited if rerank_top is None else \
+            res.visited[:max(rerank_top, 0)]
         for _, dec in top:
-            rt = hw_cost(apply_fusion(program, dec, max_group))
-            hw_evals += 1
-            hw_seconds += eval_seconds
+            if meter.affordable(1) < 1:
+                break
+            rt = hw.measure_program(materialize(dec))
             trace.append(rt)
             if rt < best_cost:
                 best_cost, best_dec = rt, dec
-            if hw_seconds >= hardware_budget_s:
-                break
 
     # the compiler default is always available as a fallback
     if default_runtime < best_cost:
         best_cost = default_runtime
         best_dec = default_fusion(program)
     return FusionSearchResult(best_dec, best_cost, default_runtime,
-                              hw_evals, model_evals, hw_seconds, trace)
+                              meter.evals - evals0, model_evals,
+                              meter.spent_s - seconds0, trace)

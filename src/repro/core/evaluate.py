@@ -94,31 +94,21 @@ def eval_tile_program(records, scorer) -> dict:
 def learned_tile_scorer(params, model_cfg, normalizer, *, max_nodes=64,
                         chunk=128, adjacency=None, node_budget=None,
                         service=None, cache_capacity=65536):
-    """Tile scorer backed by a `repro.serving.CostModelService`: every
-    (kernel, tile) query goes through the content-addressed prediction
-    cache + coalescer, so revisited candidates (top-k re-ranks, repeated
-    eval sweeps) are scored once. Pass an existing `service` to share its
-    cache across scorers; otherwise one is built from these arguments
-    (`cache_capacity=0` falls back to direct uncached scoring)."""
-    if service is None and cache_capacity:
-        from repro.serving import CostModelService
-        service = CostModelService(params, model_cfg, normalizer,
-                                   adjacency=adjacency, max_nodes=max_nodes,
-                                   chunk=chunk, node_budget=node_budget,
-                                   cache_capacity=cache_capacity)
-    if service is not None:
-        return service.tile_scorer()
-
-    predict = make_predict_fn(model_cfg)
-
-    def scorer(kernel, tiles):
-        kernel.structural_digest()     # memoize once; tile variants share
-        graphs = [kernel.with_tile(t) for t in tiles]
-        return predict_kernels(params, model_cfg, graphs, normalizer,
-                               max_nodes=max_nodes, chunk=chunk,
-                               predict_fn=predict, adjacency=adjacency,
-                               node_budget=node_budget)
-    return scorer
+    """Tile scorer backed by a `repro.search.LearnedEstimator` (and so by
+    a `repro.serving.CostModelService`): every (kernel, tile) query goes
+    through the content-addressed prediction cache + coalescer, so
+    revisited candidates (top-k re-ranks, repeated eval sweeps) are scored
+    once. Pass an existing `service` to share its cache across scorers;
+    otherwise one is built from these arguments (`cache_capacity=0` falls
+    back to direct uncached scoring)."""
+    from repro.search import LearnedEstimator
+    est = LearnedEstimator.from_params(params, model_cfg, normalizer,
+                                       max_nodes=max_nodes, chunk=chunk,
+                                       adjacency=adjacency,
+                                       node_budget=node_budget,
+                                       service=service,
+                                       cache_capacity=cache_capacity)
+    return est.tile_scorer()
 
 
 def analytical_tile_scorer(model: AnalyticalModel):
@@ -178,26 +168,16 @@ def learned_runtime_predictor(params, model_cfg, normalizer, *,
                               node_budget=None, service=None,
                               cache_capacity=65536):
     """Fusion-task model predicts log-runtime; exponentiate. Scores
-    through a `repro.serving.CostModelService` (see `learned_tile_scorer`
+    through a `repro.search.LearnedEstimator` (see `learned_tile_scorer`
     for the `service`/`cache_capacity` contract)."""
-    if service is None and cache_capacity:
-        from repro.serving import CostModelService
-        service = CostModelService(params, model_cfg, normalizer,
-                                   adjacency=adjacency, max_nodes=max_nodes,
-                                   chunk=chunk, node_budget=node_budget,
-                                   cache_capacity=cache_capacity)
-    if service is not None:
-        return service.runtime_predictor()
-
-    predict = make_predict_fn(model_cfg)
-
-    def predict_runtimes(kernels):
-        scores = predict_kernels(params, model_cfg, kernels, normalizer,
-                                 max_nodes=max_nodes, chunk=chunk,
-                                 predict_fn=predict, adjacency=adjacency,
-                                 node_budget=node_budget)
-        return np.exp(scores)
-    return predict_runtimes
+    from repro.search import LearnedEstimator
+    est = LearnedEstimator.from_params(params, model_cfg, normalizer,
+                                       max_nodes=max_nodes, chunk=chunk,
+                                       adjacency=adjacency,
+                                       node_budget=node_budget,
+                                       service=service,
+                                       cache_capacity=cache_capacity)
+    return est.runtime_predictor()
 
 
 def analytical_runtime_predictor(model: AnalyticalModel, coeffs: dict):

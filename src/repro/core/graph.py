@@ -251,10 +251,16 @@ class KernelGraph:
         >>> h(g) == h(g.renumbered([1, 0, 2]))     # distinct params swapped
         False
         """
-        h = hashlib.blake2b(digest_size=16)
-        h.update(self.structural_digest(order_sensitive=order_sensitive))
-        h.update(repr(self.tile_size).encode())
-        return h.hexdigest()
+        cached = getattr(self, "_canonical_hash", None)
+        if cached is None:
+            cached = self._canonical_hash = {}
+        key = cached.get(order_sensitive)
+        if key is None:
+            h = hashlib.blake2b(digest_size=16)
+            h.update(self.structural_digest(order_sensitive=order_sensitive))
+            h.update(repr(self.tile_size).encode())
+            key = cached[order_sensitive] = h.hexdigest()
+        return key
 
     def renumbered(self, perm: Sequence[int]) -> "KernelGraph":
         """Relabel nodes by `perm` (new order = [nodes[p] for p in perm]).

@@ -1,0 +1,30 @@
+"""Unified cost estimation + budgeted search (DESIGN.md §10).
+
+`CostEstimator` adapters (hardware / analytical / learned / cascade) with
+shared `BudgetMeter` accounting, and the batched search engine
+(`topk_rerank`, population `anneal`) both autotuners are thin wrappers
+over.
+"""
+from repro.search.engine import (
+    AnnealResult,
+    RerankChoice,
+    anneal,
+    score_groups,
+    topk_rerank,
+)
+from repro.search.estimator import (
+    AnalyticalEstimator,
+    BudgetExhausted,
+    BudgetMeter,
+    CascadeEstimator,
+    CostEstimator,
+    HardwareEstimator,
+    LearnedEstimator,
+)
+
+__all__ = [
+    "AnalyticalEstimator", "AnnealResult", "BudgetExhausted", "BudgetMeter",
+    "CascadeEstimator", "CostEstimator", "HardwareEstimator",
+    "LearnedEstimator", "RerankChoice", "anneal", "score_groups",
+    "topk_rerank",
+]

@@ -14,7 +14,9 @@ CURATED_MODULES = [
     "repro.core.graph",
     "repro.core.features",
     "repro.data.batching",
+    "repro.data.fusion",
     "repro.autotuner.tile_autotuner",
+    "repro.search.estimator",
     "repro.serving.cache",
     "repro.serving.coalescer",
     "repro.serving.service",

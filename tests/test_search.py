@@ -1,0 +1,428 @@
+"""Budgeted-search subsystem tests (repro.search, DESIGN.md §10):
+budget conservation, cascade parity, anneal parity with the pre-refactor
+sequential loop, and truthful hardware accounting."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.autotuner import (
+    autotune_program_tiles,
+    simulated_annealing_fusion,
+    tune_kernel_tiles,
+)
+from repro.autotuner.fusion_autotuner import _propose_flips
+from repro.core.analytical import AnalyticalModel
+from repro.core.simulator import TPUSimulator
+from repro.data.fusion import apply_fusion, default_fusion, fusable_edges
+from repro.data.synthetic import generate_program
+from repro.data.tile_dataset import enumerate_tiles
+from repro.search import (
+    AnalyticalEstimator,
+    BudgetExhausted,
+    BudgetMeter,
+    CascadeEstimator,
+    CostEstimator,
+    HardwareEstimator,
+    anneal,
+    topk_rerank,
+)
+
+
+class CountingSimulator(TPUSimulator):
+    """Oracle that counts how often hardware is actually touched."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.measure_calls = 0
+
+    def measure(self, g, tile=None, runs=3):
+        self.measure_calls += 1
+        return super().measure(g, tile, runs)
+
+
+class OracleEstimator(CostEstimator):
+    """Noise-free simulator timings as a stand-in 'learned' refine stage
+    (deterministic, perfectly ranked — ideal for parity tests)."""
+
+    name = "oracle"
+
+    def __init__(self, sim):
+        super().__init__()
+        self.sim = sim
+
+    def _estimate(self, kernels):
+        return np.array([self.sim.ideal_time(k) for k in kernels])
+
+
+def _kernels(fam="attention", idx=0, seed=3):
+    g = generate_program(fam, idx, seed=seed)
+    return g, apply_fusion(g, default_fusion(g))
+
+
+# ---------------------------------------------------------------------------
+# BudgetMeter
+# ---------------------------------------------------------------------------
+def test_budget_meter_accounting():
+    m = BudgetMeter(budget_s=10.0, eval_seconds=3.0)
+    assert m.affordable(10) == 3
+    m.charge(3)
+    assert m.evals == 3 and m.spent_s == pytest.approx(9.0)
+    assert m.exhausted
+    with pytest.raises(BudgetExhausted):
+        m.charge(1)
+    # a refused charge must not mutate the meter
+    assert m.evals == 3 and m.spent_s == pytest.approx(9.0)
+
+
+def test_budget_meter_unbounded_by_default():
+    m = BudgetMeter()
+    assert m.affordable(1 << 20) == 1 << 20
+    m.charge(5, seconds=123.0)
+    assert not m.exhausted and m.evals == 5
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(min_value=0.0, max_value=30.0),
+       st.floats(min_value=0.5, max_value=3.0),
+       st.integers(min_value=0, max_value=5))
+def test_fusion_hw_budget_never_overshoots(budget_s, eval_seconds, seed):
+    """'HW m' mode: budget enforced inside the annealing loop — spent
+    seconds never exceed the budget, for any budget/eval-cost/seed."""
+    sim = TPUSimulator()
+    prog, _ = _kernels("norm", 0, seed=2)
+    r = simulated_annealing_fusion(prog, sim, model_cost=None,
+                                   hardware_budget_s=budget_s,
+                                   eval_seconds=eval_seconds, seed=seed)
+    assert r.hardware_seconds_used <= budget_s + 1e-9
+    assert r.hardware_seconds_used == pytest.approx(
+        r.hardware_evals * eval_seconds)
+    assert r.best_runtime <= r.default_runtime * (1 + 1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(min_value=0.0, max_value=20.0),
+       st.floats(min_value=0.5, max_value=3.0),
+       st.integers(min_value=0, max_value=5))
+def test_fusion_model_mode_budget_never_overshoots(budget_s, eval_seconds,
+                                                   seed):
+    """'Cost model + HW' mode: the hardware re-rank respects the budget."""
+    sim = TPUSimulator()
+    am = AnalyticalModel()
+    prog, _ = _kernels("norm", 0, seed=2)
+    r = simulated_annealing_fusion(
+        prog, sim, model_cost=lambda ks: sum(am.predict(k) for k in ks),
+        hardware_budget_s=budget_s, eval_seconds=eval_seconds,
+        model_steps=40, seed=seed)
+    assert r.hardware_seconds_used <= budget_s + 1e-9
+    assert r.best_runtime <= r.default_runtime * (1 + 1e-9)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.floats(min_value=0.0, max_value=25.0),
+       st.floats(min_value=0.5, max_value=3.0))
+def test_tile_search_meter_never_overshoots(budget_s, eval_seconds):
+    """Tile top-k verification under a shared meter stays within budget
+    across ALL kernels of the program."""
+    sim = TPUSimulator()
+    _, kernels = _kernels("mlp", 0, seed=1)
+    meter = BudgetMeter(budget_s=budget_s, eval_seconds=eval_seconds)
+    res = autotune_program_tiles(kernels[:3], sim,
+                                 scorer=None,
+                                 estimator=AnalyticalEstimator(),
+                                 top_k=4, max_configs=8, meter=meter,
+                                 exhaustive_truth=False)
+    assert meter.spent_s <= budget_s + 1e-9
+    assert res.hardware_evals == meter.evals
+    # groups the budget skipped fall back to the model-best candidate
+    for r in res.results:
+        assert (r.hardware_evals > 0) == np.isfinite(r.chosen_runtime)
+
+
+# ---------------------------------------------------------------------------
+# Truthful hardware accounting (exhaustive double-measure fix)
+# ---------------------------------------------------------------------------
+def test_exhaustive_measures_each_tile_once():
+    sim = CountingSimulator()
+    _, kernels = _kernels("norm", 0, seed=2)
+    k = kernels[0]
+    tiles = enumerate_tiles(k, 12, sim.hw)
+    r = tune_kernel_tiles(k, sim, scorer=None, tiles=tiles)
+    assert sim.measure_calls == len(tiles)           # was 2x before
+    assert r.hardware_evals == len(tiles)
+    assert r.regret == pytest.approx(0.0, abs=1e-12)
+
+
+def test_topk_reuses_oracle_measurements():
+    """With exhaustive_truth, the regret-oracle pass supplies the top-k
+    measurements too — no tile is ever measured twice."""
+    sim = CountingSimulator()
+    _, kernels = _kernels("norm", 0, seed=2)
+    k = kernels[0]
+    tiles = enumerate_tiles(k, 12, sim.hw)
+    r = tune_kernel_tiles(k, sim, estimator=AnalyticalEstimator(),
+                          top_k=4, tiles=tiles)
+    assert sim.measure_calls == len(tiles)
+    assert r.hardware_evals == min(4, len(tiles))    # truthful tuning count
+
+
+# ---------------------------------------------------------------------------
+# Anneal: sequential parity and population batching
+# ---------------------------------------------------------------------------
+def _anneal_reference(program, start, cost, *, steps, rng,
+                      t0=0.1, t1=1e-3, max_group=48):
+    """Verbatim pre-refactor `fusion_autotuner._anneal` (the sequential
+    baseline the engine must reproduce at population=1)."""
+    n_edges = len(fusable_edges(program))
+    cur = start
+    cur_cost = cost(apply_fusion(program, cur, max_group))
+    visited = {cur.fuse: cur_cost}
+    evals = 1
+    best = [(cur_cost, cur)]
+    for i in range(steps):
+        if n_edges == 0:
+            break
+        temp = t0 * (t1 / t0) ** (i / max(steps - 1, 1))
+        flips = 1 + int(rng.random() < 0.3)
+        cand = cur
+        for _ in range(flips):
+            cand = cand.flip(int(rng.integers(n_edges)))
+        if cand.fuse in visited:
+            cand_cost = visited[cand.fuse]
+        else:
+            cand_cost = cost(apply_fusion(program, cand, max_group))
+            visited[cand.fuse] = cand_cost
+            evals += 1
+            best.append((cand_cost, cand))
+        accept = cand_cost < cur_cost or \
+            rng.random() < np.exp(-(cand_cost - cur_cost) /
+                                  max(temp * cur_cost, 1e-30))
+        if accept:
+            cur, cur_cost = cand, cand_cost
+    best.sort(key=lambda x: x[0])
+    return best, evals
+
+
+@pytest.mark.parametrize("fam,idx", [("attention", 1), ("rnn", 2),
+                                     ("norm", 0)])
+def test_anneal_population1_matches_sequential(fam, idx):
+    am = AnalyticalModel()
+    cost = lambda ks: sum(am.predict(k) for k in ks)      # noqa: E731
+    prog = generate_program(fam, idx, seed=0)
+    start = default_fusion(prog)
+    ref, ref_evals = _anneal_reference(prog, start, cost, steps=120,
+                                       rng=np.random.default_rng(7))
+    n_edges = len(fusable_edges(prog))
+    res = anneal(
+        start, propose=_propose_flips(n_edges),
+        cost_many=lambda ds: [cost(apply_fusion(prog, d, 48)) for d in ds],
+        steps=120 if n_edges else 0, rng=np.random.default_rng(7),
+        key=lambda d: d.fuse)
+    assert res.evals == ref_evals
+    assert [d.fuse for _, d in res.visited] == [d.fuse for _, d in ref]
+    assert np.allclose([c for c, _ in res.visited], [c for c, _ in ref],
+                       rtol=0, atol=1e-12)
+
+
+def test_population_anneal_batches_and_dedups():
+    est = AnalyticalEstimator()
+    prog = generate_program("attention", 1, seed=0)
+    n_edges = len(fusable_edges(prog))
+    batch_sizes = []
+
+    def cost_many(decs):
+        batch_sizes.append(len(decs))
+        return est.program_costs(
+            [apply_fusion(prog, d, 48) for d in decs])
+
+    res = anneal(default_fusion(prog), propose=_propose_flips(n_edges),
+                 cost_many=cost_many, steps=30,
+                 rng=np.random.default_rng(0), population=6,
+                 key=lambda d: d.fuse)
+    # one batched call per step (plus the initial), never one per proposal
+    assert len(batch_sizes) <= 31
+    assert max(batch_sizes) > 1
+    assert res.evals == len(res.visited)              # dedup: unique states
+    assert res.best[0] <= res.visited[-1][0]
+
+
+def test_program_costs_match_sequential_objective():
+    """The batched population objective must equal the per-state one."""
+    est = AnalyticalEstimator()
+    am = est.model
+    prog = generate_program("mlp", 2, seed=1)
+    rng = np.random.default_rng(0)
+    decs = [default_fusion(prog)]
+    for _ in range(5):
+        decs.append(_propose_flips(len(fusable_edges(prog)))(decs[-1], rng))
+    groups = [apply_fusion(prog, d, 48) for d in decs]
+    batched = est.program_costs(groups)
+    sequential = [sum(am.predict(k) for k in ks) for ks in groups]
+    np.testing.assert_allclose(batched, sequential, rtol=1e-12)
+
+
+def test_fusion_population_same_api_and_budget():
+    sim = TPUSimulator()
+    prog, _ = _kernels("attention", 1, seed=0)
+    r = simulated_annealing_fusion(prog, sim,
+                                   estimator=AnalyticalEstimator(),
+                                   hardware_budget_s=8, model_steps=60,
+                                   population=4, seed=0)
+    assert r.hardware_seconds_used <= 8 + 1e-9
+    assert r.model_evals > 0
+    assert r.best_runtime <= r.default_runtime * (1 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Cascade: parity with single-estimator ranking at fewer refine queries
+# ---------------------------------------------------------------------------
+def test_cascade_matches_refine_only_with_fewer_queries():
+    """Analytical prune → refine-stage top-k chooses tiles no worse than
+    refine-only top-k while issuing at most ~half the refine queries."""
+    sim = TPUSimulator()
+    _, kernels = _kernels("attention", 0, seed=3)
+    kernels = kernels[:4]
+
+    refine_only = OracleEstimator(sim)
+    res_refine = autotune_program_tiles(kernels, sim, scorer=None,
+                                        estimator=refine_only, top_k=5,
+                                        max_configs=16)
+
+    casc_refine = OracleEstimator(sim)
+    cascade = CascadeEstimator([AnalyticalEstimator(), casc_refine],
+                               keep=0.5)
+    res_casc = autotune_program_tiles(kernels, sim, scorer=None,
+                                      estimator=cascade, top_k=5,
+                                      max_configs=16)
+
+    assert casc_refine.queries < refine_only.queries
+    assert casc_refine.queries <= 0.5 * refine_only.queries + len(kernels)
+    assert res_casc.total_runtime <= res_refine.total_runtime * (1 + 1e-9)
+
+
+def test_cascade_scores_are_rank_faithful():
+    """Survivors carry final-stage scores; prunees always rank after every
+    survivor, ordered by the pruning stage."""
+    sim = TPUSimulator()
+    _, kernels = _kernels("norm", 0, seed=2)
+    k = kernels[0]
+    tiles = enumerate_tiles(k, 12, sim.hw)
+    cands = [k.with_tile(t) for t in tiles]
+    ana, orc = AnalyticalEstimator(), OracleEstimator(sim)
+    cascade = CascadeEstimator([ana, orc], keep=0.5)
+    s = cascade.estimate(cands)
+    n_kept = orc.queries
+    order = np.argsort(s, kind="stable")
+    survivors, pruned = set(map(int, order[:n_kept])), order[n_kept:]
+    # survivors are exactly the analytical top half
+    ana_scores = AnalyticalEstimator().estimate(cands)
+    expect = set(map(int, np.argsort(ana_scores, kind="stable")[:n_kept]))
+    assert survivors == expect
+    # pruned tail keeps the analytical order
+    pruned_ana = ana_scores[pruned]
+    assert np.all(np.diff(pruned_ana) >= 0)
+
+
+def test_cascade_prunes_per_group_not_globally():
+    """Under estimate_groups, every kernel keeps its own refine share —
+    an analytically-expensive kernel must not lose all its candidates to
+    cheaper kernels' tiles (cross-group starvation)."""
+    sim = TPUSimulator()
+    _, kernels = _kernels("attention", 0, seed=3)
+    groups = [[k.with_tile(t) for t in enumerate_tiles(k, 12, sim.hw)]
+              for k in kernels[:4]]
+    refine = OracleEstimator(sim)
+    cascade = CascadeEstimator([AnalyticalEstimator(), refine], keep=0.5)
+    outs = cascade.estimate_groups(groups)
+    assert [len(s) for s in outs] == [len(g) for g in groups]
+    # refine stage saw exactly ceil(n/2) candidates of EVERY group
+    assert refine.queries == sum(int(np.ceil(0.5 * len(g)))
+                                 for g in groups)
+    assert cascade.queries == sum(len(g) for g in groups)
+
+
+def test_cascade_inherits_refine_stage_representation():
+    """The fusion autotuner keys its dense-path drop off
+    estimator.adjacency/max_nodes; a cascade must forward its refine
+    stage's."""
+    sim = TPUSimulator()
+
+    class DenseLike(OracleEstimator):
+        adjacency = "dense"
+        max_nodes = 48
+
+    cascade = CascadeEstimator([AnalyticalEstimator(), DenseLike(sim)])
+    assert cascade.adjacency == "dense" and cascade.max_nodes == 48
+    assert AnalyticalEstimator().adjacency is None
+
+
+def test_cascade_refuses_calibrated_output_surfaces():
+    """Cascade scores are rank-only; runtimes()/program_costs() must
+    refuse instead of summing synthetic rank values as seconds."""
+    sim = TPUSimulator()
+    _, kernels = _kernels("norm", 0, seed=2)
+    cascade = CascadeEstimator([AnalyticalEstimator(),
+                                OracleEstimator(sim)])
+    with pytest.raises(TypeError):
+        cascade.runtimes(kernels[:2])
+    with pytest.raises(TypeError):
+        cascade.program_costs([kernels[:2]])
+
+
+def test_fusion_hw_mode_follows_shared_meter_budget():
+    """A shared meter affording more than this call's hardware_budget_s
+    default must govern the HW-mode search length."""
+    sim = TPUSimulator()
+    prog, _ = _kernels("attention", 1, seed=0)
+    meter = BudgetMeter(budget_s=120.0, eval_seconds=2.0)   # 60 evals
+    r = simulated_annealing_fusion(prog, sim, meter=meter, seed=0)
+    assert r.hardware_evals > 30          # old cap: int(60/2) = 30
+    assert r.hardware_seconds_used <= 120.0 + 1e-9
+
+
+def test_cascade_hardware_final_stage_charges_meter():
+    sim = TPUSimulator()
+    _, kernels = _kernels("norm", 0, seed=2)
+    k = kernels[0]
+    tiles = enumerate_tiles(k, 8, sim.hw)
+    cands = [k.with_tile(t) for t in tiles]
+    meter = BudgetMeter(budget_s=1000.0, eval_seconds=2.0)
+    cascade = CascadeEstimator(
+        [AnalyticalEstimator(), HardwareEstimator(sim, meter=meter)],
+        keep=0.5)
+    s = cascade.estimate(cands)
+    kept = int(np.ceil(0.5 * len(cands)))
+    assert meter.evals == kept
+    assert s.shape == (len(cands),)
+
+
+# ---------------------------------------------------------------------------
+# topk_rerank engine edge cases
+# ---------------------------------------------------------------------------
+def test_topk_rerank_budget_truncation_and_fallback():
+    sim = TPUSimulator()
+    _, kernels = _kernels("norm", 0, seed=2)
+    k = kernels[0]
+    tiles = enumerate_tiles(k, 8, sim.hw)
+    groups = [[k.with_tile(t) for t in tiles]] * 3
+    est = AnalyticalEstimator()
+    meter = BudgetMeter(budget_s=2 * 2.0, eval_seconds=2.0)  # 2 evals total
+    choices = topk_rerank(groups, estimator=est, top_k=3,
+                          measure=lambda g: sim.measure(g), meter=meter)
+    assert meter.evals == 2
+    assert choices[0].hardware_evals == 2
+    for c in choices[1:]:
+        assert c.hardware_evals == 0 and np.isnan(c.chosen_runtime)
+        assert c.chosen == int(np.argsort(c.scores)[0])   # model-best
+
+
+def test_estimator_query_accounting_and_group_split():
+    sim = TPUSimulator()
+    _, kernels = _kernels("norm", 0, seed=2)
+    est = OracleEstimator(sim)
+    groups = [kernels[:2], kernels[2:3], []]
+    per_group = est.estimate_groups(groups)
+    assert [len(s) for s in per_group] == [2, 1, 0]
+    assert est.queries == 3
+    flat = est.estimate(kernels[:3])
+    np.testing.assert_allclose(np.concatenate(per_group[:2]), flat)
