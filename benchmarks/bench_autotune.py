@@ -110,7 +110,10 @@ def _sequential_reference(prog, start, cost_many, *, steps, rng,
     return best
 
 
-def bench_parity(world, cfg, params, predict_fn, prog) -> bool:
+def bench_parity(world, cfg, params, predict_fn, prog) -> tuple[bool, float]:
+    """Returns (visit sequences identical, max objective delta) — BOTH are
+    gated: identical sequences with drifted objectives and matching
+    objectives via different visit orders are separate regressions."""
     est = _estimator(world, cfg, params, predict_fn)
     cost_many = _fusion_cost_many(est, prog)
     start = default_fusion(prog)
@@ -126,10 +129,9 @@ def bench_parity(world, cfg, params, predict_fn, prog) -> bool:
         [d.fuse for _, d in ref]
     delta = max((abs(a - b) for (a, _), (b, _) in zip(res.visited, ref)),
                 default=float("inf")) if same_seq else float("inf")
-    ok = same_seq and delta < 1e-6
     print(f"  parity: visit sequences {'identical' if same_seq else 'DIVERGED'}"
           f" ({len(res.visited)} states), objective delta {delta:.2e}")
-    return ok
+    return same_seq, delta
 
 
 class _TimedEstimator:
@@ -209,10 +211,13 @@ def bench_cascade(world, cfg, params, predict_fn) -> bool:
     print(f"  cascade:      regret {100*regret_c:.3f}% "
           f"({casc_refine.queries} learned queries — {ratio:.2f}x, "
           f"limit {ratio_limit:.2f}x)")
-    return regret_c <= regret_l + 1e-6 and ratio <= ratio_limit
+    ok = regret_c <= regret_l + 1e-6 and ratio <= ratio_limit
+    return ok, {"regret_learned": regret_l, "regret_cascade": regret_c,
+                "query_ratio": ratio, "query_ratio_limit": ratio_limit}
 
 
 def main() -> int:
+    t_start = time.perf_counter()
     world = build_world()
     cfg, params, predict_fn = _model(world)
     # a big program (an imported arch if available): hundreds of fusable
@@ -223,11 +228,24 @@ def main() -> int:
           f"({len(fusable_edges(prog))} fusable edges), "
           f"{MODEL_STEPS} sequential steps, population {POP}")
 
-    ok_parity = bench_parity(world, cfg, params, predict_fn, prog)
-    ok_tp, _ = bench_throughput(world, cfg, params, predict_fn, prog)
-    ok_casc = bench_cascade(world, cfg, params, predict_fn)
+    same_seq, parity_delta = bench_parity(world, cfg, params, predict_fn,
+                                          prog)
+    ok_parity = same_seq and parity_delta < 1e-6
+    ok_tp, tp_speedup = bench_throughput(world, cfg, params, predict_fn,
+                                         prog)
+    ok_casc, casc = bench_cascade(world, cfg, params, predict_fn)
 
-    ok = ok_parity and ok_tp and ok_casc
+    from common import Gate, emit_json
+    ok = emit_json(
+        "autotune",
+        [Gate("population1_visit_sequences_identical", same_seq, True, "=="),
+         Gate("population1_parity_delta", parity_delta, 1e-6, "<"),
+         Gate("batched_scoring_speedup", tp_speedup, 2.0),
+         Gate("cascade_regret_no_worse",
+              casc["regret_cascade"], casc["regret_learned"] + 1e-6, "<="),
+         Gate("cascade_query_ratio",
+              casc["query_ratio"], casc["query_ratio_limit"], "<=")],
+        wall_s=time.perf_counter() - t_start, extra=casc)
     print(f"bench_autotune: {'PASS' if ok else 'FAIL'} "
           f"(need population=1 parity <1e-6, >=2x batched scoring "
           f"throughput, cascade regret match at <=0.5x learned queries)"

@@ -146,6 +146,7 @@ def time_infer(batches, cfg, params, label):
 
 
 def main():
+    t_start = time.perf_counter()
     graphs, targets = build_corpus()
     normalizer = F.fit_normalizer(graphs)
     cfg = model_cfg()
@@ -185,7 +186,15 @@ def main():
     infer_speedup = i_sparse / i_dense
     print(f"  speedup: train {train_speedup:.2f}x, infer "
           f"{infer_speedup:.2f}x")
-    ok = agree and train_speedup >= 2.0
+    from common import Gate, emit_json
+    ok = emit_json(
+        "batching",
+        [Gate("train_speedup", train_speedup, 2.0),
+         Gate("prediction_delta", err, 1e-4, "<")],
+        wall_s=time.perf_counter() - t_start,
+        extra={"infer_speedup": infer_speedup,
+               "dense_nodes": total_dense_nodes,
+               "sparse_nodes": total_sparse_nodes})
     print(f"bench_batching: {'PASS' if ok else 'FAIL'} "
           f"(need >=2x train speedup and <1e-4 prediction delta)")
     return 0 if ok else 1

@@ -1,0 +1,268 @@
+"""Sharded corpus store: parallel build, no-op rebuild, reload, streaming
+parity (DESIGN.md §11, docs/DATA.md; acceptance gates for the data layer).
+
+Builds the same tile+fusion corpus four ways and checks that the store
+behaves like a cache of the in-memory path, not a different path:
+
+  1. parallel build     — `build_corpus` at workers=4 vs workers=1,
+                          identical manifest hashes (partitioning cannot
+                          change the corpus) and >= BUILD_SPEEDUP_GATE
+                          faster wall-clock,
+  2. no-op rebuild      — re-invoking with an unchanged spec returns the
+                          existing manifests without building (and in a
+                          small fraction of the build time),
+  3. reload             — `StreamingCorpus` open+verify+full decode of
+                          both kinds >= 5x faster than regenerating the
+                          records in-process (the pre-store behavior of
+                          every trainer/bench run; generation + oracle
+                          measurement, no store write),
+  4. streaming parity   — `TileBatchSampler` and `Prefetcher` batch
+                          streams over the store are byte-identical to
+                          the same samplers over the in-memory records
+                          (targets, group ids, masks, every encoded
+                          array leaf).
+
+The build-speedup threshold is calibrated, not assumed: `cpu_count` lies
+on quota'd/shared containers (this repo's dev box reports 2 CPUs but two
+busy processes achieve only ~1.35x one process's throughput), so the
+bench first measures the host's actual parallel capacity with spin
+workers and gates at min(2.0, max(1.0, 0.7 * capacity)) — on the >=4-vCPU
+CI runners capacity is ~3-4 so the gate binds at the full 2.0x
+(the ISSUE-5 acceptance number); on a throttled host it degrades to
+"parallel build must still beat serial" instead of demanding throughput
+the machine cannot physically deliver. Builds run as interleaved
+best-of-2 trials — single-trial wall clock on shared CPUs is noisy. The
+computed threshold and measured capacity are recorded in
+BENCH_corpus.json.
+
+`BENCH_SCALE` scales the program *count* only (kernel sizes and per-
+kernel config counts are fixed — see benchmarks/common.py). The build-
+speedup gate narrows at small scales (less measurement work to amortize
+pool startup + record pickling over: ~2.0x at scale 1.0 on 2 cores but
+only ~0.9x at 0.5), so CI runs this benchmark UNSCALED like
+bench_serving / bench_autotune.
+
+jax must not load before the build phases: the builder forks workers
+(`--mp-context auto` picks fork only while jax is absent), so everything
+jax-backed (samplers, encoding, emit_json's common import) loads after
+the pools are done.
+
+  PYTHONPATH=src python benchmarks/bench_corpus.py
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.data.store import StreamingCorpus, record_key   # noqa: E402
+from repro.launch.build_corpus import DEFAULT_FUSION, DEFAULT_TILE, \
+    build_corpus  # noqa: E402
+
+SCALE = float(os.environ.get("BENCH_SCALE", "1.0"))
+PROGRAMS = max(int(48 * SCALE), 16)
+TILE_OPTS = dict(DEFAULT_TILE, max_configs_per_kernel=48)
+FUSION_OPTS = dict(DEFAULT_FUSION, configs_per_program=12)
+KINDS = ("tile", "fusion")
+PAR_WORKERS = 4
+RELOAD_GATE = 5.0
+PARITY_STEPS = 6
+
+
+def _spin(seconds: float) -> int:
+    t0 = time.perf_counter()
+    n = 0
+    while time.perf_counter() - t0 < seconds:
+        n += 1
+    return n
+
+
+def parallel_capacity(workers: int, window: float = 0.5) -> float:
+    """Measured speedup ceiling of this host: total busy-loop throughput
+    of `workers` concurrent processes over one process's. ~= the real
+    core count, except on quota'd containers where cpu_count overstates
+    what the scheduler will actually deliver."""
+    import multiprocessing
+    one = _spin(window)
+    with multiprocessing.get_context("fork").Pool(workers) as pool:
+        many = sum(pool.map(_spin, [window] * workers))
+    return many / max(one, 1)
+
+
+def build(out: str, workers: int, force: bool = False) -> tuple[dict, float]:
+    t0 = time.perf_counter()
+    manifests = build_corpus(
+        out, kinds=KINDS, programs=PROGRAMS, seed=0, workers=workers,
+        tile_opts=TILE_OPTS, fusion_opts=FUSION_OPTS, force=force,
+        quiet=True)
+    return manifests, time.perf_counter() - t0
+
+
+def build_in_memory() -> tuple[list, list]:
+    """The records the store holds, built the pre-store way: in-process,
+    program by program in task order, deduped by content key first-wins —
+    the ground truth the streaming path must match byte-for-byte."""
+    from repro.core.simulator import TPUSimulator
+    from repro.data.fusion import apply_fusion, default_fusion
+    from repro.data.fusion_dataset import build_fusion_records
+    from repro.data.synthetic import corpus_plan, generate_program
+    from repro.data.tile_dataset import build_tile_records
+
+    sim = TPUSimulator()
+    tile, fusion = [], []
+    for fam, idx in corpus_plan(PROGRAMS):
+        prog = generate_program(fam, idx, 0)
+        kernels = apply_fusion(prog, default_fusion(prog))
+        tile.extend(build_tile_records(kernels, sim, seed=0, **TILE_OPTS))
+        fusion.extend(build_fusion_records(prog, sim, seed=0,
+                                           **FUSION_OPTS))
+    out = []
+    for recs in (tile, fusion):
+        seen: set[str] = set()
+        kept = [r for r in recs
+                if not (record_key(r) in seen or seen.add(record_key(r)))]
+        out.append(kept)
+    return out[0], out[1]
+
+
+def main() -> int:
+    t_start = time.perf_counter()
+    assert "jax" not in sys.modules, \
+        "bench_corpus must fork its build pools before jax loads"
+    root = tempfile.mkdtemp(prefix="bench_corpus_")
+    out1, out4 = os.path.join(root, "w1"), os.path.join(root, "w4")
+    capacity = parallel_capacity(PAR_WORKERS)
+    build_gate = min(2.0, max(1.0, 0.7 * capacity))
+    print(f"bench_corpus: {PROGRAMS} programs, tile configs "
+          f"{TILE_OPTS['max_configs_per_kernel']}, fusion configs "
+          f"{FUSION_OPTS['configs_per_program']}; {os.cpu_count()} cpus, "
+          f"measured parallel capacity {capacity:.2f}x "
+          f"-> build gate >= {build_gate:.2f}x")
+    try:
+        # --- 1. parallel build vs serial build ----------------------------
+        # interleaved best-of-2: single-trial wall clock on a shared CPU
+        # is too noisy for a binding ratio gate (benchmarks/common.py)
+        t_par = t_ser = float("inf")
+        for trial in range(2):
+            m4, dt4 = build(out4, workers=PAR_WORKERS, force=trial > 0)
+            m1, dt1 = build(out1, workers=1, force=trial > 0)
+            t_par, t_ser = min(t_par, dt4), min(t_ser, dt1)
+        build_speedup = t_ser / t_par
+        deterministic = all(
+            m1[k]["manifest_hash"] == m4[k]["manifest_hash"] for k in KINDS)
+        print(f"  build: workers=1 {t_ser:.1f}s, workers={PAR_WORKERS} "
+              f"{t_par:.1f}s -> {build_speedup:.2f}x (best of 2); "
+              f"manifests {'identical' if deterministic else 'DIVERGED'}")
+
+        # --- 2. unchanged spec rebuild is a manifest-hash no-op -----------
+        t0 = time.perf_counter()
+        m1b, _ = build(out1, workers=1)
+        t_noop = time.perf_counter() - t0
+        noop = (all(m1b[k]["manifest_hash"] == m1[k]["manifest_hash"]
+                    for k in KINDS) and t_noop < max(0.25 * t_ser, 1.0))
+        print(f"  rebuild same spec: {t_noop:.2f}s "
+              f"({'no-op' if noop else 'REBUILT'})")
+
+        # --- 3. reload from store vs regeneration -------------------------
+        t0 = time.perf_counter()
+        stores = {k: StreamingCorpus.open(os.path.join(out1, k),
+                                          verify=True) for k in KINDS}
+        store_recs = {k: list(stores[k]) for k in KINDS}
+        t_reload = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        mem_tile, mem_fusion = build_in_memory()   # the pre-store behavior
+        t_regen = time.perf_counter() - t0
+        reload_speedup = t_regen / t_reload
+        print(f"  reload: {t_reload:.2f}s for "
+              f"{sum(len(r) for r in store_recs.values())} records "
+              f"-> {reload_speedup:.2f}x vs in-process regeneration "
+              f"({t_regen:.1f}s)")
+
+        # --- 4. streaming parity vs the in-memory path --------------------
+        content_ok = (
+            len(mem_tile) == len(store_recs["tile"])
+            and len(mem_fusion) == len(store_recs["fusion"])
+            and all(record_key(a) == record_key(b) and
+                    np.array_equal(a.runtimes, b.runtimes)
+                    for a, b in zip(mem_tile, store_recs["tile"]))
+            and all(record_key(a) == record_key(b) and a.runtime == b.runtime
+                    for a, b in zip(mem_fusion, store_recs["fusion"])))
+        print(f"  record content identical: {content_ok} "
+              f"({len(mem_tile)} tile / {len(mem_fusion)} fusion records)")
+
+        # jax-backed encoding from here on (pools are done)
+        import jax
+        from repro.data.prefetch import Prefetcher
+        from repro.data.sampler import BalancedSampler, TileBatchSampler
+        from repro.data.tile_dataset import fit_tile_normalizer
+
+        def batches_equal(a, b) -> bool:
+            fields = [(a.targets, b.targets), (a.valid, b.valid)]
+            if hasattr(a, "group_ids"):
+                fields.append((a.group_ids, b.group_ids))
+            fields += list(zip(jax.tree_util.tree_leaves(a.graphs),
+                               jax.tree_util.tree_leaves(b.graphs)))
+            return all(np.array_equal(np.asarray(x), np.asarray(y))
+                       for x, y in fields)
+
+        norm = fit_tile_normalizer(mem_tile)
+        # streaming corpus view: small LRU — draws hop shards mid-batch
+        tile_stream = StreamingCorpus.open(os.path.join(out1, "tile"),
+                                           max_cached_shards=2)
+        s_mem = TileBatchSampler(mem_tile, norm, max_nodes=48, seed=0)
+        s_store = TileBatchSampler(tile_stream, norm, max_nodes=48, seed=0)
+        parity = all(batches_equal(s_mem.batch(s), s_store.batch(s))
+                     for s in range(PARITY_STEPS))
+        with Prefetcher(TileBatchSampler(tile_stream, norm, max_nodes=48,
+                                         seed=0), depth=2) as pre:
+            parity &= all(batches_equal(s_mem.batch(s), pre.batch(s))
+                          for s in range(PARITY_STEPS))
+        fus_stream = StreamingCorpus.open(os.path.join(out1, "fusion"),
+                                          max_cached_shards=2)
+        f_mem = BalancedSampler(mem_fusion, norm, batch_size=32,
+                                max_nodes=48, seed=0)
+        f_store = BalancedSampler(fus_stream, norm, batch_size=32,
+                                  max_nodes=48, seed=0)
+        parity &= all(batches_equal(f_mem.batch(s), f_store.batch(s))
+                      for s in range(PARITY_STEPS))
+        parity &= content_ok
+        print(f"  sampler + prefetcher streams byte-identical: {parity}")
+
+        from common import Gate, emit_json
+        ok = emit_json(
+            "corpus",
+            [Gate("build_speedup_workers4", build_speedup, build_gate),
+             Gate("manifest_deterministic", deterministic, True, "=="),
+             Gate("rebuild_noop", noop, True, "=="),
+             Gate("reload_speedup", reload_speedup, RELOAD_GATE),
+             Gate("streaming_parity", parity, True, "==")],
+            wall_s=time.perf_counter() - t_start,
+            extra={"programs": PROGRAMS,
+                   "parallel_capacity": round(capacity, 2),
+                   "build_s_workers1": round(t_ser, 2),
+                   "build_s_workers4": round(t_par, 2),
+                   "regen_s": round(t_regen, 2),
+                   "reload_s": round(t_reload, 3),
+                   "tile_records": len(store_recs["tile"]),
+                   "fusion_records": len(store_recs["fusion"]),
+                   "tile_manifest": m1["tile"]["manifest_hash"],
+                   "fusion_manifest": m1["fusion"]["manifest_hash"]})
+        print(f"bench_corpus: {'PASS' if ok else 'FAIL'} "
+              f"(need >={build_gate:.2f}x build, deterministic "
+              f"manifests, no-op rebuild, >={RELOAD_GATE:.0f}x reload, "
+              f"byte-identical streams; got {build_speedup:.2f}x / "
+              f"{deterministic} / {noop} / {reload_speedup:.2f}x / "
+              f"{parity})")
+        return 0 if ok else 1
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

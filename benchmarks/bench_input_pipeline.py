@@ -121,6 +121,7 @@ def train_steps_per_sec(mc, records, norm, *, prefetch: int) -> float:
 
 
 def main() -> int:
+    t_start = time.perf_counter()
     sim = TPUSimulator()
     kernels = [random_kernel(KERNEL_NODES[i % len(KERNEL_NODES)], seed=i)
                for i in range(NUM_KERNELS)]
@@ -189,8 +190,16 @@ def main() -> int:
             stream_ok &= batches_equal(sync.batch(3), pre2.batch(3))
     print(f"  prefetched stream byte-identical: {stream_ok}")
 
-    ok = (enc_speedup >= 3.0 and e2e_speedup >= 1.5 and delta < 1e-6
-          and stream_ok)
+    from common import Gate, emit_json
+    ok = emit_json(
+        "input_pipeline",
+        [Gate("encode_speedup", enc_speedup, 3.0),
+         Gate("train_steps_speedup", e2e_speedup, 1.5),
+         Gate("prediction_delta", delta, 1e-6, "<"),
+         Gate("prefetch_stream_identical", bool(stream_ok), True, "==")],
+        wall_s=time.perf_counter() - t_start,
+        extra={"sparse_encode_speedup": sparse_speedup,
+               "steps_per_sec_old": sps_old, "steps_per_sec_new": sps_new})
     print(f"bench_input_pipeline: {'PASS' if ok else 'FAIL'} "
           f"(need >=3x encode, >=1.5x steps/s, delta <1e-6, identical "
           f"stream; got {enc_speedup:.2f}x / {e2e_speedup:.2f}x / "

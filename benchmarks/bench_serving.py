@@ -51,6 +51,8 @@ SUBSET = 0.75
 
 
 def main() -> int:
+    import time
+    t_start = time.perf_counter()
     if SCALE < 1.0:
         print(f"[warn] BENCH_SCALE={SCALE}: the 2x gate margin is ~2.07x "
               "at 0.5 — run unscaled for a binding verdict "
@@ -96,7 +98,15 @@ def main() -> int:
           f"flushes={stats.flushes} p50={stats.latency_p50_ms:.2f}ms "
           f"p99={stats.latency_p99_ms:.2f}ms")
     print(f"  speedup {speedup:.2f}x, max prediction delta {err:.2e}")
-    ok = speedup >= 2.0 and err < 1e-4
+    from common import Gate, emit_json
+    ok = emit_json(
+        "serving",
+        [Gate("service_speedup", speedup, 2.0),
+         Gate("prediction_delta", err, 1e-4, "<")],
+        wall_s=time.perf_counter() - t_start,
+        extra={"hit_rate": stats.hit_rate, "flushes": stats.flushes,
+               "latency_p50_ms": stats.latency_p50_ms,
+               "latency_p99_ms": stats.latency_p99_ms})
     print(f"bench_serving: {'PASS' if ok else 'FAIL'} "
           f"(need >=2x speedup and <1e-4 prediction delta)")
     return 0 if ok else 1

@@ -1,0 +1,79 @@
+"""CI gate enforcement over machine-readable benchmark results.
+
+Reads the ``BENCH_<name>.json`` files written by `common.emit_json`
+(uploaded as artifacts by ci.yml), prints a gate table, and exits
+non-zero if any gate failed OR any --expect'ed report is missing (a
+benchmark that crashed before emitting must fail the job, not slip
+through). Run after the benchmark steps with ``if: always()`` so every
+report is archived even when one regresses.
+
+  python benchmarks/check_gates.py --expect batching input_pipeline \\
+      serving autotune corpus
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.environ.get("BENCH_JSON_DIR", "."),
+                    help="where BENCH_*.json live (default: $BENCH_JSON_DIR "
+                         "or CWD)")
+    ap.add_argument("--expect", nargs="*", default=[],
+                    help="bench names that MUST have emitted a report")
+    args = ap.parse_args(argv)
+
+    reports = {}
+    for path in sorted(glob.glob(os.path.join(args.dir, "BENCH_*.json"))):
+        name = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        try:
+            with open(path) as f:
+                reports[name] = json.load(f)
+        except ValueError as e:
+            print(f"MALFORMED  {path}: {e}")
+            reports[name] = None
+
+    failures = []
+    for name in args.expect:
+        if name not in reports:
+            print(f"MISSING    BENCH_{name}.json — benchmark did not emit "
+                  "a report (crashed before its gates?)")
+            failures.append(f"{name}: missing report")
+
+    for name, doc in sorted(reports.items()):
+        if doc is None:
+            failures.append(f"{name}: malformed report")
+            continue
+        wall = doc.get("wall_s")
+        head = (f"{name} (scale={doc.get('bench_scale')}, "
+                f"wall={wall if wall is not None else '?'}s)")
+        gates = doc.get("gates", [])
+        if not gates:
+            print(f"INFO       {head}: no gates (archival only)")
+            continue
+        for g in gates:
+            status = "PASS" if g["passed"] else "FAIL"
+            line = (f"{status:10s} {name}.{g['name']}: "
+                    f"{g['value']} {g['op']} {g['threshold']}")
+            print(line)
+            if not g["passed"]:
+                failures.append(f"{name}.{g['name']}: "
+                                f"{g['value']} !{g['op']} {g['threshold']}")
+
+    if failures:
+        print(f"\n{len(failures)} gate failure(s):")
+        for f_ in failures:
+            print(f"  - {f_}")
+        return 1
+    n_gates = sum(len(d.get('gates', [])) for d in reports.values() if d)
+    print(f"\nall gates passed ({len(reports)} reports, {n_gates} gates)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

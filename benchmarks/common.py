@@ -1,9 +1,27 @@
-"""Shared benchmark world: corpus, datasets, splits, cached model training.
+"""Shared benchmark world: corpus, datasets, splits, cached model training,
+and machine-readable gate emission.
 
 All benchmarks operate on the same corpus (synthetic families + programs
 imported from the assigned architectures) with the paper's two split
 methods. Trained cost models are cached under experiments/bench_cache keyed
 by a config hash so re-runs (and the §Perf loop) are incremental.
+
+The corpus itself is cached the same way: `build_world` writes the tile +
+fusion datasets to a sharded on-disk store (repro.data.store) under
+experiments/bench_cache/corpus/<spec_hash> on first build and reloads the
+records from it afterwards — byte-identical records (dedup off, float64
+labels bit-exact), so every downstream cache key and gate number is
+unchanged; only the regeneration+measurement cost disappears. Set
+REPRO_BENCH_CORPUS_CACHE=0 to force in-memory rebuilds.
+
+## Machine-readable results (CI gates)
+
+Every gated benchmark calls `emit_json(name, gates, wall_s=...)` which
+writes ``BENCH_<name>.json`` (gate names, measured values, thresholds,
+BENCH_SCALE, wall time) into $BENCH_JSON_DIR (default: CWD). CI uploads
+these as artifacts — the perf trajectory is archived per run — and
+`benchmarks/check_gates.py` fails the job on any gate regression or any
+missing expected report.
 
 ## BENCH_SCALE semantics
 
@@ -99,6 +117,43 @@ class World:
 _WORLD = None
 
 
+def _load_or_build_datasets(programs, sim, seed: int):
+    """Build-once-reuse-forever corpus datasets, keyed by spec hash.
+
+    The store write keeps dedup OFF: `build_tile_dataset` /
+    `build_fusion_dataset` outputs are preserved record-for-record
+    (including cross-program structural duplicates), so the reloaded
+    world is byte-identical to an in-memory build — same sampler
+    streams, same trained-model cache keys, same gate numbers.
+    """
+    from repro.data.store import StreamingCorpus, load_manifest, \
+        spec_hash, write_corpus
+    fusion_configs = max(int(12 * SCALE), 6)
+    spec = {"world": 1, "seed": seed, "scale": SCALE,
+            "programs": sorted(p.program for p in programs),
+            "tile_configs": 24, "fusion_configs": fusion_configs}
+    cdir = os.path.join(CACHE_DIR, "corpus", spec_hash(spec))
+    use_cache = os.environ.get("REPRO_BENCH_CORPUS_CACHE", "1") != "0"
+    tdir, fdir = os.path.join(cdir, "tile"), os.path.join(cdir, "fusion")
+    tm, fm = load_manifest(tdir), load_manifest(fdir)
+    if (use_cache and tm is not None and fm is not None
+            and tm["spec_hash"] == fm["spec_hash"] == spec_hash(spec)):
+        tds = TileDataset(list(StreamingCorpus.open(tdir)))
+        fds = FusionDataset(list(StreamingCorpus.open(fdir)))
+        print(f"[bench] corpus reloaded from store {cdir} "
+              f"(tile {tm['manifest_hash'][:12]}…, "
+              f"fusion {fm['manifest_hash'][:12]}…)", file=sys.stderr)
+        return tds, fds
+    tds = build_tile_dataset(programs, sim, max_configs_per_kernel=24)
+    fds = build_fusion_dataset(programs, sim,
+                               configs_per_program=fusion_configs)
+    if use_cache:
+        write_corpus(tdir, "tile", tds.records, spec=spec, dedup=False)
+        write_corpus(fdir, "fusion", fds.records, spec=spec, dedup=False)
+        print(f"[bench] corpus written to store {cdir}", file=sys.stderr)
+    return tds, fds
+
+
 def build_world(num_programs: int | None = None, seed: int = 0) -> World:
     global _WORLD
     if _WORLD is not None:
@@ -111,9 +166,7 @@ def build_world(num_programs: int | None = None, seed: int = 0) -> World:
             programs.append(import_arch_program(arch))
         except Exception as e:                        # noqa: BLE001
             print(f"[warn] arch import {arch} failed: {e}", file=sys.stderr)
-    tds = build_tile_dataset(programs, sim, max_configs_per_kernel=24)
-    fds = build_fusion_dataset(
-        programs, sim, configs_per_program=max(int(12 * SCALE), 6))
+    tds, fds = _load_or_build_datasets(programs, sim, seed)
     names = sorted({p.program for p in programs})
     splits = {m: split_programs(names, method=m, seed=seed)
               for m in ("random", "manual")}
@@ -205,3 +258,57 @@ def csv_row(name: str, **kv) -> str:
     parts = [name] + [f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
                       for k, v in kv.items()]
     return ",".join(parts)
+
+
+# ----------------------------------------------------------------------------
+# Machine-readable benchmark results (CI artifacts + gate enforcement)
+# ----------------------------------------------------------------------------
+@dataclass
+class Gate:
+    """One pass/fail criterion of a benchmark.
+
+    `op` compares `value` against `threshold`: ">=" / "<=" / ">" / "<"
+    for measured margins, "==" for exactness/boolean gates (pass
+    value=bool(x), threshold=True).
+    """
+    name: str
+    value: float | bool
+    threshold: float | bool
+    op: str = ">="
+
+    _OPS = {">=": lambda v, t: v >= t, "<=": lambda v, t: v <= t,
+            ">": lambda v, t: v > t, "<": lambda v, t: v < t,
+            "==": lambda v, t: v == t}
+
+    @property
+    def passed(self) -> bool:
+        return bool(self._OPS[self.op](self.value, self.threshold))
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "value": self.value,
+                "threshold": self.threshold, "op": self.op,
+                "passed": self.passed}
+
+
+def emit_json(name: str, gates: list, *, wall_s: float | None = None,
+              extra: dict | None = None) -> bool:
+    """Write ``BENCH_<name>.json`` (the machine-readable result CI archives
+    and `benchmarks/check_gates.py` enforces) into $BENCH_JSON_DIR
+    (default: CWD). `gates` may mix `Gate` objects and pre-built dicts.
+    Returns True iff every gate passed.
+    """
+    gate_dicts = [g.to_dict() if isinstance(g, Gate) else dict(g)
+                  for g in gates]
+    passed = all(g["passed"] for g in gate_dicts)
+    doc = {"bench": name, "bench_scale": SCALE,
+           "wall_s": None if wall_s is None else round(float(wall_s), 3),
+           "passed": passed, "gates": gate_dicts, "extra": extra or {}}
+    out_dir = os.environ.get("BENCH_JSON_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"[bench] wrote {path} ({'PASS' if passed else 'FAIL'})",
+          file=sys.stderr)
+    return passed

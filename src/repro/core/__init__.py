@@ -1,14 +1,44 @@
 # The paper's primary contribution: a learned performance model for tensor
 # programs (kernel graphs), plus the analytical baseline and the measurement
 # oracle (TPU timing simulator). See DESIGN.md for the layer map.
-from repro.core.graph import KernelGraph, Node, Program
-from repro.core.model import CostModelConfig, cost_model_apply, cost_model_init
-from repro.core.simulator import TPUSimulator, V5E, HardwareSpec
-from repro.core.analytical import AnalyticalModel
+#
+# Exports resolve lazily (PEP 562): the graph IR / simulator / analytical
+# layer is pure numpy, and corpus-builder workers (repro.launch.build_corpus)
+# import it without paying for — or fork-racing with — the jax-backed model
+# stack, which loads on first touch of a model symbol.
+import importlib
 
-__all__ = [
-    "KernelGraph", "Node", "Program",
-    "CostModelConfig", "cost_model_apply", "cost_model_init",
-    "TPUSimulator", "V5E", "HardwareSpec",
-    "AnalyticalModel",
-]
+_EXPORTS = {
+    "KernelGraph": "repro.core.graph",
+    "Node": "repro.core.graph",
+    "Program": "repro.core.graph",
+    "CostModelConfig": "repro.core.model",          # imports jax
+    "cost_model_apply": "repro.core.model",         # imports jax
+    "cost_model_init": "repro.core.model",          # imports jax
+    "TPUSimulator": "repro.core.simulator",
+    "V5E": "repro.core.simulator",
+    "HardwareSpec": "repro.core.simulator",
+    "AnalyticalModel": "repro.core.analytical",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    target = _EXPORTS.get(name)
+    if target is not None:
+        value = getattr(importlib.import_module(target), name)
+        globals()[name] = value      # cache: next access skips __getattr__
+        return value
+    try:                             # `repro.core.features`-style access
+        return importlib.import_module(f"{__name__}.{name}")
+    except ModuleNotFoundError as e:
+        if e.name != f"{__name__}.{name}":
+            raise                    # real dependency failure inside the
+                                     # submodule (e.g. jax missing)
+        raise AttributeError(
+            f"module 'repro.core' has no attribute {name!r}") from None
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -79,6 +79,24 @@ class Node:
             return 0.0
         return float(self.volume)
 
+    # --- serialization (on-disk corpus store; repro.data.store) -------------
+    def to_dict(self) -> dict:
+        """JSON-able representation; exact inverse of `Node.from_dict`."""
+        return {"op": self.op.name, "shape": list(self.shape),
+                "dtype_bytes": int(self.dtype_bytes),
+                "inputs": list(self.inputs),
+                "is_output": bool(self.is_output),
+                "contract_dim": int(self.contract_dim),
+                "filter_size": list(self.filter_size),
+                "reduced_dims": list(self.reduced_dims)}
+
+    @staticmethod
+    def from_dict(d: dict) -> "Node":
+        return Node(opset.OP_BY_NAME[d["op"]], tuple(d["shape"]),
+                    int(d["dtype_bytes"]), tuple(d["inputs"]),
+                    bool(d["is_output"]), int(d["contract_dim"]),
+                    tuple(d["filter_size"]), tuple(d["reduced_dims"]))
+
 
 @dataclass
 class KernelGraph:
@@ -261,6 +279,31 @@ class KernelGraph:
             h.update(repr(self.tile_size).encode())
             key = cached[order_sensitive] = h.hexdigest()
         return key
+
+    # --- serialization (on-disk corpus store; repro.data.store) -------------
+    def to_dict(self) -> dict:
+        """JSON-able representation of the full kernel (nodes + labels +
+        tile). `from_dict` is an exact inverse: the round trip preserves
+        content addressing, so a stored kernel dedups against its source.
+
+        >>> from repro.core import opset
+        >>> from repro.core.graph import KernelGraph, Node
+        >>> g = KernelGraph([Node(opset.PARAMETER, (8, 4)),
+        ...                  Node(opset.TANH, (8, 4), inputs=(0,),
+        ...                       is_output=True)], program="mlp_0")
+        >>> g2 = KernelGraph.from_dict(g.to_dict())
+        >>> (g2.program, g2.canonical_hash() == g.canonical_hash())
+        ('mlp_0', True)
+        """
+        return {"nodes": [n.to_dict() for n in self.nodes],
+                "program": self.program, "name": self.name,
+                "tile_size": list(self.tile_size)}
+
+    @staticmethod
+    def from_dict(d: dict) -> "KernelGraph":
+        return KernelGraph([Node.from_dict(n) for n in d["nodes"]],
+                           program=d["program"], name=d["name"],
+                           tile_size=tuple(d["tile_size"]))
 
     def renumbered(self, perm: Sequence[int]) -> "KernelGraph":
         """Relabel nodes by `perm` (new order = [nodes[p] for p in perm]).

@@ -1,33 +1,71 @@
 """Data substrate: program corpus generation, fusion machinery, tile/fusion
-dataset construction, splits, and balanced batch sampling."""
-from repro.data.fusion import (
-    FusionDecision,
-    apply_fusion,
-    default_fusion,
-    fusable_edges,
-    random_fusion,
-)
-from repro.data.batching import (
-    BucketSpec,
-    bucket_for,
-    encode_packed,
-    iter_packed_batches,
-    pack_graphs,
-)
-from repro.data.prefetch import Prefetcher
-from repro.data.synthetic import FAMILIES, generate_corpus, generate_program,\
-    random_kernel
-from repro.data.tile_dataset import enumerate_tiles, build_tile_dataset
-from repro.data.fusion_dataset import build_fusion_dataset
-from repro.data.corpus import split_programs, kernel_hash
-from repro.data.sampler import BalancedSampler, TileBatchSampler
+dataset construction, splits, balanced batch sampling, and the sharded
+on-disk corpus store (docs/DATA.md).
 
-__all__ = [
-    "FusionDecision", "apply_fusion", "default_fusion", "fusable_edges",
-    "random_fusion", "FAMILIES", "generate_corpus", "generate_program",
-    "random_kernel",
-    "enumerate_tiles", "build_tile_dataset", "build_fusion_dataset",
-    "split_programs", "kernel_hash", "BalancedSampler", "TileBatchSampler",
-    "BucketSpec", "bucket_for", "encode_packed", "iter_packed_batches",
-    "pack_graphs", "Prefetcher",
-]
+Exports resolve lazily (PEP 562): importing `repro.data` (or any
+submodule, e.g. `repro.data.store` inside a corpus-builder worker) does
+NOT pull in the encoding/batching stack — `repro.core.features` registers
+pytrees with jax at import time, and the builder fans work across
+processes that never need jax. Touching a batching/sampling/prefetch name
+triggers the real import on first use.
+"""
+import importlib
+
+_EXPORTS = {
+    # fusion machinery (numpy-only)
+    "FusionDecision": "repro.data.fusion",
+    "apply_fusion": "repro.data.fusion",
+    "default_fusion": "repro.data.fusion",
+    "fusable_edges": "repro.data.fusion",
+    "random_fusion": "repro.data.fusion",
+    # synthetic corpus (numpy-only)
+    "FAMILIES": "repro.data.synthetic",
+    "corpus_plan": "repro.data.synthetic",
+    "generate_corpus": "repro.data.synthetic",
+    "generate_program": "repro.data.synthetic",
+    "random_kernel": "repro.data.synthetic",
+    # datasets + splits (numpy-only)
+    "enumerate_tiles": "repro.data.tile_dataset",
+    "build_tile_dataset": "repro.data.tile_dataset",
+    "build_tile_records": "repro.data.tile_dataset",
+    "build_fusion_dataset": "repro.data.fusion_dataset",
+    "build_fusion_records": "repro.data.fusion_dataset",
+    "split_programs": "repro.data.corpus",
+    "kernel_hash": "repro.data.corpus",
+    # on-disk corpus store (numpy-only)
+    "CorpusWriter": "repro.data.store",
+    "StreamingCorpus": "repro.data.store",
+    "load_manifest": "repro.data.store",
+    "write_corpus": "repro.data.store",
+    # encoding/batching/sampling stack (imports jax via core.features)
+    "BucketSpec": "repro.data.batching",
+    "bucket_for": "repro.data.batching",
+    "encode_packed": "repro.data.batching",
+    "iter_packed_batches": "repro.data.batching",
+    "pack_graphs": "repro.data.batching",
+    "Prefetcher": "repro.data.prefetch",
+    "BalancedSampler": "repro.data.sampler",
+    "TileBatchSampler": "repro.data.sampler",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    target = _EXPORTS.get(name)
+    if target is not None:
+        value = getattr(importlib.import_module(target), name)
+        globals()[name] = value      # cache: next access skips __getattr__
+        return value
+    try:                             # `repro.data.sampler`-style access
+        return importlib.import_module(f"{__name__}.{name}")
+    except ModuleNotFoundError as e:
+        if e.name != f"{__name__}.{name}":
+            raise                    # real dependency failure inside the
+                                     # submodule (e.g. jax missing)
+        raise AttributeError(
+            f"module 'repro.data' has no attribute {name!r}") from None
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

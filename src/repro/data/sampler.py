@@ -48,6 +48,20 @@ class FusionBatch:
     valid: np.ndarray        # [B] float32
 
 
+def _program_index(records) -> dict[str, list[int]]:
+    """record index -> per-program draw lists. A `StreamingCorpus` (or any
+    sequence exposing `record_programs`) is indexed from its manifest
+    metadata alone — no shard is decoded until a batch actually draws
+    from it, which is what keeps store-backed sampling shard-by-shard."""
+    programs = getattr(records, "record_programs", None)
+    if programs is None:
+        programs = [r.program for r in records]
+    by_program: dict[str, list[int]] = {}
+    for i, p in enumerate(programs):
+        by_program.setdefault(p, []).append(i)
+    return by_program
+
+
 def _encode(graphs, adjacency: str, max_nodes: int, normalizer):
     """Encode a drawn graph list with the configured representation.
 
@@ -88,9 +102,7 @@ class TileBatchSampler:
         self.host_id = host_id
         self.num_hosts = num_hosts
         self.adjacency = adjacency
-        self._by_program: dict[str, list[int]] = {}
-        for i, r in enumerate(records):
-            self._by_program.setdefault(r.program, []).append(i)
+        self._by_program = _program_index(records)
         self._programs = sorted(self._by_program)
 
     @property
@@ -149,9 +161,7 @@ class BalancedSampler:
         self.host_id = host_id
         self.num_hosts = num_hosts
         self.adjacency = adjacency
-        self._by_program: dict[str, list[int]] = {}
-        for i, r in enumerate(records):
-            self._by_program.setdefault(r.program, []).append(i)
+        self._by_program = _program_index(records)
         self._programs = sorted(self._by_program)
 
     def batch(self, step: int) -> FusionBatch:

@@ -1,0 +1,514 @@
+"""Content-addressed, sharded on-disk corpus store (DESIGN.md §11,
+docs/DATA.md).
+
+Every trainer, benchmark and autotuner in this repo used to regenerate its
+corpus (synthetic families + jaxpr-imported architectures, labeled by the
+simulator oracle) in RAM on every run. This module makes a corpus a
+*durable artifact*:
+
+* `CorpusWriter` — streams records into numbered npz shards
+  (``shard-00000.npz`` …) under one directory, deduplicating by the
+  kernels' `canonical_hash` content address, then writes a
+  ``manifest.json`` with per-shard sha256 checksums, a per-record
+  program/family index, dedup stats and a deterministic `manifest_hash`
+  over all of it. Same records in ⇒ byte-identical shards and manifest
+  out (npz and JSON are both reproducible), so rebuilding an unchanged
+  spec is a manifest-hash no-op.
+* `StreamingCorpus` — a lazy, read-only sequence over a stored corpus.
+  The manifest alone provides ``len``, `record_programs` and split
+  metadata, so samplers index the corpus without touching a shard;
+  record access decodes one shard at a time through a small LRU
+  (``max_cached_shards``) — the full corpus is never materialized.
+  Records round-trip exactly (float64 runtimes bit-for-bit), so the
+  existing samplers and the `repro.data.prefetch.Prefetcher` produce
+  byte-identical batch streams from a store and from the in-memory
+  records it was written from, and `batch(step)` purity keeps the
+  stream seek/resume-able.
+
+A shard is a single ``.npz`` with two entries: ``records`` (the UTF-8
+JSON record payloads — graphs via `KernelGraph.to_dict`, tile sweeps,
+program labels, dedup keys) and ``runtimes`` (one concatenated float64
+block, sliced per record on read — JSON never touches the label floats).
+
+`python -m repro.launch.build_corpus` fans corpus *generation* across
+worker processes into a store; `benchmarks/common.py` builds its world
+once and reloads it from a store keyed by spec hash.
+
+>>> import tempfile
+>>> from repro.data.fusion_dataset import FusionKernelRecord
+>>> from repro.data.store import StreamingCorpus, write_corpus
+>>> from repro.data.synthetic import random_kernel
+>>> recs = [FusionKernelRecord(random_kernel(8, seed=s), 1e-5 * (s + 1),
+...                            program=f"mlp_{s}") for s in range(3)]
+>>> d = tempfile.mkdtemp()
+>>> m = write_corpus(d, "fusion", recs + recs[:1])   # one duplicate
+>>> (m["stats"]["records"], m["stats"]["duplicates_dropped"])
+(3, 1)
+>>> c = StreamingCorpus.open(d)
+>>> (len(c), c.record_programs)
+(3, ['mlp_0', 'mlp_1', 'mlp_2'])
+>>> c[1].runtime == recs[1].runtime                  # exact float64
+True
+>>> write_corpus(tempfile.mkdtemp(), "fusion",       # deterministic
+...              recs)["manifest_hash"] == write_corpus(
+...     tempfile.mkdtemp(), "fusion", recs)["manifest_hash"]
+True
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+import shutil
+from collections import OrderedDict
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from repro.core.graph import KernelGraph
+from repro.data.corpus import family_of
+from repro.data.fusion_dataset import FusionKernelRecord
+from repro.data.tile_dataset import TileKernelRecord
+
+FORMAT_VERSION = 1
+MANIFEST_NAME = "manifest.json"
+_SHARD_FMT = "shard-{:05d}.npz"
+
+KINDS = ("tile", "fusion")
+
+
+class CorpusFormatError(Exception):
+    """Raised for malformed, truncated, or checksum-mismatched stores."""
+
+
+# ----------------------------------------------------------------------------
+# Hashing
+# ----------------------------------------------------------------------------
+def _canonical_json(obj) -> bytes:
+    return json.dumps(obj, sort_keys=True,
+                      separators=(",", ":")).encode("utf-8")
+
+
+def spec_hash(spec: dict) -> str:
+    """Short stable identity of a build spec (the cached-corpus key)."""
+    return hashlib.sha256(_canonical_json(spec)).hexdigest()[:16]
+
+
+def manifest_hash(manifest: dict) -> str:
+    """Hash of everything in the manifest except the hash field itself —
+    shard checksums, record index, spec, stats. Two builds of the same
+    corpus agree on it; any content change flips it."""
+    clean = {k: v for k, v in manifest.items() if k != "manifest_hash"}
+    return hashlib.sha256(_canonical_json(clean)).hexdigest()
+
+
+def record_key(record) -> str:
+    """Content-addressed dedup key of one record.
+
+    Fusion records: the kernel's ``canonical_hash(order_sensitive=True)``
+    (structure + node order + tile — node order matters to the LSTM
+    reduction, so order-insensitive dedup could merge records a model
+    distinguishes). Tile records additionally fold in the tile sweep, so
+    the same kernel measured under two different sweeps is two records.
+    Labels (``program``/``name``) are deliberately excluded, exactly like
+    the serving cache key.
+    """
+    base = record.kernel.canonical_hash(order_sensitive=True)
+    tiles = getattr(record, "tiles", None)
+    if tiles is None:
+        return base
+    h = hashlib.blake2b(digest_size=16)
+    h.update(base.encode())
+    h.update(repr([tuple(int(x) for x in t) for t in tiles]).encode())
+    return h.hexdigest()
+
+
+def _sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+# ----------------------------------------------------------------------------
+# Record <-> payload
+# ----------------------------------------------------------------------------
+def pack_record(kind: str, record) -> dict:
+    """Serialize one dataset record to its transit form: the payload
+    already encoded as canonical JSON text plus the dedup/index metadata
+    and the float64 runtimes as a list.
+
+    Encoding to JSON *here* (in the builder worker) rather than at shard-
+    write time matters: the merging parent only joins strings, so on a
+    host where it competes with its own workers for cores the merge stays
+    off the critical path — and strings pickle across the process
+    boundary much faster than nested dicts. Shard bytes are identical
+    either way (canonical separators + sorted keys). Runtimes live in the
+    shard's binary block, never as JSON text.
+    """
+    if kind == "tile":
+        runtimes = np.asarray(record.runtimes, np.float64)
+        payload = {"kernel": record.kernel.to_dict(),
+                   "tiles": [list(map(int, t)) for t in record.tiles],
+                   "program": record.program,
+                   "kernel_id": int(record.kernel_id)}
+    elif kind == "fusion":
+        runtimes = np.asarray([record.runtime], np.float64)
+        payload = {"kernel": record.kernel.to_dict(),
+                   "program": record.program}
+    else:
+        raise ValueError(f"unknown corpus kind {kind!r}")
+    payload["key"] = record_key(record)
+    payload["samples"] = int(runtimes.shape[0])
+    return {"json": json.dumps(payload, sort_keys=True,
+                               separators=(",", ":")),
+            "key": payload["key"], "program": payload["program"],
+            "samples": payload["samples"], "runtimes": runtimes.tolist()}
+
+
+def unpack_record(kind: str, payload: dict, runtimes: np.ndarray):
+    """Inverse of `pack_record` (runtimes: float64 [payload['samples']])."""
+    kernel = KernelGraph.from_dict(payload["kernel"])
+    if kind == "tile":
+        return TileKernelRecord(
+            kernel=kernel,
+            tiles=[tuple(t) for t in payload["tiles"]],
+            runtimes=np.asarray(runtimes, np.float64),
+            program=payload["program"],
+            kernel_id=int(payload.get("kernel_id", -1)))
+    return FusionKernelRecord(kernel=kernel,
+                              runtime=float(runtimes[0]),
+                              program=payload["program"])
+
+
+# ----------------------------------------------------------------------------
+# Writer
+# ----------------------------------------------------------------------------
+class CorpusWriter:
+    """Streams records into a sharded store; atomic at the directory level.
+
+    Shards and the manifest are written into a hidden ``.tmp-<pid>``
+    sibling and moved over `out_dir` in one rename at `finalize()` — a
+    killed build never leaves a half-written corpus behind. Records are
+    deduplicated on their `record_key` as they arrive (first occurrence
+    wins, insertion order preserved), so merging per-worker outputs in a
+    fixed task order yields the same store no matter how the work was
+    partitioned.
+    """
+
+    def __init__(self, out_dir: str, kind: str, *, spec: dict | None = None,
+                 shard_records: int = 256, dedup: bool = True):
+        if kind not in KINDS:
+            raise ValueError(f"unknown corpus kind {kind!r}")
+        if shard_records < 1:
+            raise ValueError("shard_records must be >= 1")
+        self.out_dir = out_dir
+        self.kind = kind
+        self.spec = spec or {}
+        self.shard_records = int(shard_records)
+        self.dedup = dedup
+        self._tmp = out_dir.rstrip("/\\") + f".tmp-{os.getpid()}"
+        if os.path.exists(self._tmp):
+            shutil.rmtree(self._tmp)
+        os.makedirs(self._tmp)
+        self._seen: set[str] = set()
+        self._buf: list[dict] = []          # packed records awaiting a shard
+        self._shards: list[dict] = []
+        self._index: list[dict] = []
+        self._dropped = 0
+        self._finalized = False
+
+    # -- adding ------------------------------------------------------------
+    def add(self, record) -> bool:
+        """Add one dataset record; returns False if deduplicated away."""
+        return self.add_packed(pack_record(self.kind, record))
+
+    def add_packed(self, packed: dict) -> bool:
+        """Add one `pack_record` output (the worker-transit form)."""
+        if self.dedup:
+            if packed["key"] in self._seen:
+                self._dropped += 1
+                return False
+            self._seen.add(packed["key"])
+        self._buf.append(packed)
+        if len(self._buf) >= self.shard_records:
+            self._flush_shard()
+        return True
+
+    def add_many(self, records: Iterable) -> int:
+        return sum(self.add(r) for r in records)
+
+    # -- shard + manifest emission -----------------------------------------
+    def _flush_shard(self) -> None:
+        if not self._buf:
+            return
+        runtimes = np.concatenate(
+            [np.asarray(p["runtimes"], np.float64) for p in self._buf])
+        fname = _SHARD_FMT.format(len(self._shards))
+        path = os.path.join(self._tmp, fname)
+        # payloads are pre-encoded canonical JSON objects (pack_record);
+        # joining them IS the canonical dump of the payload list
+        blob = ("[" + ",".join(p["json"] for p in self._buf)
+                + "]").encode("utf-8")
+        with open(path, "wb") as f:
+            np.savez(f, records=np.frombuffer(blob, np.uint8),
+                     runtimes=runtimes)
+        self._shards.append({
+            "file": fname, "sha256": _sha256_file(path),
+            "records": len(self._buf),
+            "samples": int(sum(p["samples"] for p in self._buf)),
+        })
+        self._index.extend({"program": p["program"], "key": p["key"],
+                            "samples": p["samples"]} for p in self._buf)
+        self._buf = []
+
+    def finalize(self) -> dict:
+        """Flush the tail shard, write the manifest, move into place.
+        Returns the manifest dict."""
+        if self._finalized:
+            raise RuntimeError("CorpusWriter already finalized")
+        self._flush_shard()
+        families: dict[str, int] = {}
+        programs: set[str] = set()
+        for e in self._index:
+            families[family_of(e["program"])] = \
+                families.get(family_of(e["program"]), 0) + 1
+            programs.add(e["program"])
+        manifest = {
+            "format_version": FORMAT_VERSION,
+            "kind": self.kind,
+            "spec": self.spec,
+            "spec_hash": spec_hash(self.spec),
+            "shards": self._shards,
+            "index": self._index,
+            "stats": {
+                "records": len(self._index),
+                "samples": int(sum(e["samples"] for e in self._index)),
+                "duplicates_dropped": self._dropped,
+                "families": dict(sorted(families.items())),
+                "programs": sorted(programs),
+            },
+        }
+        manifest["manifest_hash"] = manifest_hash(manifest)
+        with open(os.path.join(self._tmp, MANIFEST_NAME), "w") as f:
+            json.dump(manifest, f, sort_keys=True, indent=1)
+        if os.path.exists(self.out_dir):
+            if not _looks_like_store(self.out_dir):
+                raise CorpusFormatError(
+                    f"{self.out_dir} exists and is not a corpus store; "
+                    "refusing to overwrite")
+            shutil.rmtree(self.out_dir)
+        os.makedirs(os.path.dirname(os.path.abspath(self.out_dir)),
+                    exist_ok=True)
+        os.replace(self._tmp, self.out_dir)
+        self._finalized = True
+        return manifest
+
+    def abort(self) -> None:
+        shutil.rmtree(self._tmp, ignore_errors=True)
+
+
+def _looks_like_store(path: str) -> bool:
+    if not os.path.isdir(path):
+        return False
+    entries = os.listdir(path)
+    return (not entries or MANIFEST_NAME in entries
+            or any(e.startswith("shard-") for e in entries))
+
+
+def write_corpus(out_dir: str, kind: str, records: Sequence, *,
+                 spec: dict | None = None, shard_records: int = 256,
+                 dedup: bool = True) -> dict:
+    """One-shot write of an in-memory record list. Returns the manifest."""
+    w = CorpusWriter(out_dir, kind, spec=spec, shard_records=shard_records,
+                     dedup=dedup)
+    try:
+        w.add_many(records)
+        return w.finalize()
+    except BaseException:
+        w.abort()
+        raise
+
+
+def load_manifest(path: str) -> dict | None:
+    """Read `path`'s manifest, or None if absent/unreadable/wrong version."""
+    try:
+        with open(os.path.join(path, MANIFEST_NAME)) as f:
+            m = json.load(f)
+        return m if m.get("format_version") == FORMAT_VERSION else None
+    except (OSError, ValueError):
+        return None
+
+
+# ----------------------------------------------------------------------------
+# Reader
+# ----------------------------------------------------------------------------
+class StreamingCorpus(Sequence):
+    """Lazy random-access + shard-streaming view of a stored corpus.
+
+    Acts as a read-only sequence of dataset records
+    (`TileKernelRecord` / `FusionKernelRecord`). ``len`` and
+    `record_programs` come from the manifest alone; ``corpus[i]`` decodes
+    the owning shard on demand (verifying its checksum) and keeps up to
+    ``max_cached_shards`` decoded shards in an LRU, so both samplers can
+    draw uniformly from a corpus much larger than RAM. Iteration walks
+    shard by shard in record order.
+    """
+
+    def __init__(self, path: str, manifest: dict, *,
+                 max_cached_shards: int = 4):
+        if max_cached_shards < 1:
+            raise ValueError("max_cached_shards must be >= 1")
+        self.path = path
+        self.manifest = manifest
+        self.kind = manifest["kind"]
+        self.max_cached_shards = int(max_cached_shards)
+        self._cache: OrderedDict[int, list] = OrderedDict()
+        # record i lives in shard s iff bounds[s] <= i < bounds[s+1]
+        self._bounds = np.cumsum(
+            [0] + [s["records"] for s in manifest["shards"]])
+        if int(self._bounds[-1]) != len(manifest["index"]):
+            raise CorpusFormatError(
+                f"{path}: manifest index has {len(manifest['index'])} "
+                f"records but shards declare {int(self._bounds[-1])}")
+
+    @classmethod
+    def open(cls, path: str, *, max_cached_shards: int = 4,
+             verify: bool = False) -> "StreamingCorpus":
+        manifest = load_manifest(path)
+        if manifest is None:
+            raise CorpusFormatError(f"no readable corpus manifest in {path}")
+        c = cls(path, manifest, max_cached_shards=max_cached_shards)
+        if verify:
+            c.verify()
+        return c
+
+    # -- manifest-only metadata (no shard decode) --------------------------
+    @property
+    def record_programs(self) -> list[str]:
+        """Program name of every record, in record order — lets the
+        samplers build their per-program index without decoding shards."""
+        return [e["program"] for e in self.manifest["index"]]
+
+    @property
+    def manifest_hash(self) -> str:
+        return self.manifest["manifest_hash"]
+
+    @property
+    def spec(self) -> dict:
+        return self.manifest["spec"]
+
+    @property
+    def num_samples(self) -> int:
+        return int(self.manifest["stats"]["samples"])
+
+    def programs(self) -> list[str]:
+        return list(self.manifest["stats"]["programs"])
+
+    # -- record access ------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.manifest["index"])
+
+    def __getitem__(self, i: int):
+        if isinstance(i, slice):
+            return [self[j] for j in range(*i.indices(len(self)))]
+        n = len(self)
+        if i < 0:
+            i += n
+        if not 0 <= i < n:
+            raise IndexError(i)
+        s = int(np.searchsorted(self._bounds, i, side="right")) - 1
+        return self._shard_records(s)[i - int(self._bounds[s])]
+
+    def __iter__(self):
+        for s in range(len(self.manifest["shards"])):
+            yield from self._shard_records(s)
+
+    def iter_shards(self):
+        """Yield each shard's decoded record list in order — the
+        sequential-scan path (build pipelines, eval sweeps)."""
+        for s in range(len(self.manifest["shards"])):
+            yield self._shard_records(s)
+
+    def _shard_records(self, s: int) -> list:
+        hit = self._cache.get(s)
+        if hit is not None:
+            self._cache.move_to_end(s)
+            return hit
+        records = self._decode_shard(s)
+        self._cache[s] = records
+        while len(self._cache) > self.max_cached_shards:
+            self._cache.popitem(last=False)
+        return records
+
+    def _decode_shard(self, s: int) -> list:
+        entry = self.manifest["shards"][s]
+        path = os.path.join(self.path, entry["file"])
+        with open(path, "rb") as f:
+            raw = f.read()
+        digest = hashlib.sha256(raw).hexdigest()
+        if digest != entry["sha256"]:
+            raise CorpusFormatError(
+                f"{path}: checksum mismatch (manifest {entry['sha256'][:12]}"
+                f"…, file {digest[:12]}…)")
+        with np.load(io.BytesIO(raw)) as z:
+            payloads = json.loads(bytes(z["records"]).decode("utf-8"))
+            runtimes = z["runtimes"]
+        records, off = [], 0
+        for p in payloads:
+            n = int(p["samples"])
+            records.append(unpack_record(self.kind, p,
+                                         runtimes[off:off + n]))
+            off += n
+        if off != runtimes.shape[0] or len(records) != entry["records"]:
+            raise CorpusFormatError(f"{path}: shard contents disagree with "
+                                    "manifest record/sample counts")
+        return records
+
+    # -- splits -------------------------------------------------------------
+    def select_programs(self, names) -> "CorpusSubset":
+        """Streaming equivalent of `data.corpus.filter_by_programs`: a lazy
+        view of the records whose program is in `names` (order preserved).
+        Built from the manifest index alone — nothing is decoded."""
+        name_set = set(names)
+        idx = [i for i, e in enumerate(self.manifest["index"])
+               if e["program"] in name_set]
+        return CorpusSubset(self, idx)
+
+    # -- integrity ----------------------------------------------------------
+    def verify(self) -> None:
+        """Recompute every shard checksum; raises CorpusFormatError on any
+        mismatch or missing shard file."""
+        for entry in self.manifest["shards"]:
+            path = os.path.join(self.path, entry["file"])
+            if not os.path.exists(path):
+                raise CorpusFormatError(f"missing shard {path}")
+            if _sha256_file(path) != entry["sha256"]:
+                raise CorpusFormatError(f"{path}: checksum mismatch")
+        if manifest_hash(self.manifest) != self.manifest["manifest_hash"]:
+            raise CorpusFormatError(f"{self.path}: manifest hash mismatch")
+
+
+class CorpusSubset(Sequence):
+    """Lazy index-mapped view over a `StreamingCorpus` (a train/val/test
+    split). Shares the parent's shard LRU; exposes `record_programs` so the
+    samplers index it without decoding anything."""
+
+    def __init__(self, corpus: StreamingCorpus, indices: Sequence[int]):
+        self._corpus = corpus
+        self._indices = list(indices)
+
+    @property
+    def record_programs(self) -> list[str]:
+        index = self._corpus.manifest["index"]
+        return [index[i]["program"] for i in self._indices]
+
+    def __len__(self) -> int:
+        return len(self._indices)
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [self[j] for j in range(*i.indices(len(self)))]
+        return self._corpus[self._indices[i]]

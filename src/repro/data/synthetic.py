@@ -310,20 +310,29 @@ def generate_program(family: str, idx: int, seed: int) -> KernelGraph:
     return FAMILIES[family](rng, f"{family}_{idx}")
 
 
-def generate_corpus(num_programs: int = 104, seed: int = 0) -> list[KernelGraph]:
-    """Generate a corpus of pre-fusion program graphs."""
+def corpus_plan(num_programs: int) -> list[tuple[str, int]]:
+    """The (family, idx) schedule `generate_corpus` materializes, without
+    building any graph — the corpus-builder CLI fans exactly this plan
+    across worker processes (repro.launch.build_corpus), so a sharded
+    parallel build reproduces the in-process corpus program-for-program."""
     total_w = sum(FAMILY_WEIGHTS.values())
-    programs: list[KernelGraph] = []
+    plan: list[tuple[str, int]] = []
     idx = 0
-    while len(programs) < num_programs:
+    while len(plan) < num_programs:
         for fam, w in FAMILY_WEIGHTS.items():
             count = max(1, round(num_programs * w / total_w))
             for _ in range(count):
-                if len(programs) >= num_programs:
+                if len(plan) >= num_programs:
                     break
-                programs.append(generate_program(fam, idx, seed))
+                plan.append((fam, idx))
                 idx += 1
-    return programs[:num_programs]
+    return plan[:num_programs]
+
+
+def generate_corpus(num_programs: int = 104, seed: int = 0) -> list[KernelGraph]:
+    """Generate a corpus of pre-fusion program graphs."""
+    return [generate_program(fam, idx, seed)
+            for fam, idx in corpus_plan(num_programs)]
 
 
 def random_kernel(num_nodes: int, seed: int = 0, *,

@@ -9,6 +9,7 @@ compares within a group.
 from __future__ import annotations
 
 import itertools
+import zlib
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -103,6 +104,36 @@ def fit_tile_normalizer(records: list["TileKernelRecord"]):
         for i in picks:
             graphs.append(r.kernel.with_tile(r.tiles[i]))
     return fit_normalizer(graphs)
+
+
+def build_tile_records(kernels: list[KernelGraph], sim: TPUSimulator,
+                       *, max_configs_per_kernel: int = 48,
+                       max_kernel_nodes: int = 64, min_configs: int = 2,
+                       seed: int = 0) -> list[TileKernelRecord]:
+    """Partition-invariant record builder for the corpus store.
+
+    `build_tile_dataset` seeds each kernel's tile enumeration with a
+    running record counter, which couples every record to all kernels
+    before it — fine in one process, wrong when
+    `repro.launch.build_corpus` splits the corpus across workers. Here
+    the enumeration seed derives from (seed, kernel content hash), so any
+    partitioning of `kernels` yields the same records, and the store's
+    manifest hash is a pure function of the build spec.
+    """
+    records = []
+    for k in kernels:
+        if k.num_nodes > max_kernel_nodes:
+            continue
+        kseed = zlib.crc32(
+            f"{seed}:{k.canonical_hash(order_sensitive=True)}".encode())
+        tiles = enumerate_tiles(k, max_configs_per_kernel, sim.hw,
+                                seed=int(kseed % (2 ** 31)))
+        if len(tiles) < min_configs:
+            continue
+        runtimes = np.array([sim.measure(k.with_tile(t)) for t in tiles])
+        records.append(TileKernelRecord(
+            kernel=k, tiles=tiles, runtimes=runtimes, program=k.program))
+    return records
 
 
 def build_tile_dataset(programs: list[KernelGraph], sim: TPUSimulator,

@@ -9,6 +9,13 @@ Two sub-commands:
       PYTHONPATH=src python -m repro.launch.train cost-model \
           --task tile --steps 2000 --ckpt-dir ckpts/tile
 
+    With --from-store the corpus is streamed shard-by-shard from an
+    on-disk store built by `python -m repro.launch.build_corpus`
+    (docs/DATA.md) — no generation or oracle measurement at train time:
+
+      PYTHONPATH=src python -m repro.launch.train cost-model \
+          --task tile --from-store experiments/corpora/v1/tile
+
   lm — train one of the 10 assigned architectures (reduced config on CPU;
     full configs are exercised via the dry-run).
 
@@ -33,24 +40,39 @@ def train_cost_model(args) -> None:
     from repro.training.optim import AdamWConfig
     from repro.training.trainer import CostModelTrainer, TrainerConfig
 
-    sim = TPUSimulator()
-    programs = generate_corpus(args.programs, seed=args.seed)
-    split = split_programs([p.program for p in programs],
-                           method=args.split, seed=args.seed)
+    want_kind = "tile" if args.task.startswith("tile") else "fusion"
+    if args.from_store:
+        from repro.data.store import StreamingCorpus
+        corpus = StreamingCorpus.open(args.from_store)
+        if corpus.kind != want_kind:
+            raise SystemExit(f"--from-store points at a {corpus.kind!r} "
+                             f"corpus but --task {args.task} needs "
+                             f"{want_kind!r}")
+        split = split_programs(corpus.programs(), method=args.split,
+                               seed=args.seed)
+        recs = corpus.select_programs(split["train"])
+        print(f"streaming {len(recs)}/{len(corpus)} records from "
+              f"{args.from_store} (manifest {corpus.manifest_hash[:12]}…)")
+    else:
+        sim = TPUSimulator()
+        programs = generate_corpus(args.programs, seed=args.seed)
+        split = split_programs([p.program for p in programs],
+                               method=args.split, seed=args.seed)
+        if want_kind == "tile":
+            ds = build_tile_dataset(programs, sim, max_configs_per_kernel=24)
+        else:
+            ds = build_fusion_dataset(programs, sim, configs_per_program=12)
+        recs = filter_by_programs(ds.records, split["train"])
     mc = CostModelConfig(gnn=args.gnn, reduction=args.reduction,
                          hidden_dim=args.hidden, opcode_embed_dim=32,
                          max_nodes=args.max_nodes)
-    if args.task.startswith("tile"):
-        ds = build_tile_dataset(programs, sim, max_configs_per_kernel=24)
-        recs = filter_by_programs(ds.records, split["train"])
+    if want_kind == "tile":
         from repro.data.tile_dataset import fit_tile_normalizer
         norm = fit_tile_normalizer(recs)
         sampler = TileBatchSampler(recs, norm, kernels_per_batch=4,
                                    configs_per_kernel=8,
                                    max_nodes=args.max_nodes)
     else:
-        ds = build_fusion_dataset(programs, sim, configs_per_program=12)
-        recs = filter_by_programs(ds.records, split["train"])
         norm = fit_normalizer([r.kernel for r in recs])
         sampler = BalancedSampler(recs, norm, batch_size=32,
                                   max_nodes=args.max_nodes)
@@ -97,6 +119,10 @@ def main() -> None:
                     choices=["tile", "fusion", "tile_mse", "fusion_mse"])
     cm.add_argument("--steps", type=int, default=2000)
     cm.add_argument("--programs", type=int, default=48)
+    cm.add_argument("--from-store", default="",
+                    help="stream records from an on-disk corpus store "
+                         "(one kind's directory, e.g. corpora/v1/tile) "
+                         "instead of regenerating + re-measuring")
     cm.add_argument("--split", default="random",
                     choices=["random", "manual"])
     cm.add_argument("--gnn", default="graphsage")

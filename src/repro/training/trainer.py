@@ -21,6 +21,12 @@ With `TrainerConfig.prefetch > 0` the sampler is wrapped in a
 `repro.data.prefetch.Prefetcher`: a background thread encodes that many
 batches ahead of the jitted step (optionally staging them on device), with
 a byte-identical batch stream and restart-safe determinism (DESIGN.md §9).
+
+The sampler's record list may be a `repro.data.store.StreamingCorpus` (or
+a split view of one): records then stream shard-by-shard from disk as
+batches draw them, with a byte-identical batch stream to in-memory records
+— `python -m repro.launch.train cost-model --from-store` is this path
+(DESIGN.md §11, docs/DATA.md).
 """
 from __future__ import annotations
 

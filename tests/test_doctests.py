@@ -1,9 +1,12 @@
 """Executable documentation: run the curated modules' docstring examples.
 
 Every module listed here ships `>>>` examples in its docstrings (the same
-snippets docs/API.md quotes); this test keeps them from rotting. The CI
-docs job additionally runs `pytest --doctest-modules` over the same set —
-see .github/workflows/ci.yml.
+snippets docs/API.md quotes); this test keeps them from rotting.
+
+CURATED_MODULES is the single source of truth for the CI docs job: the
+workflow runs ``python -m tests.test_doctests --list`` and feeds the
+printed file paths to ``pytest --doctest-modules`` — the job can never
+drift from this list again (it used to hard-code a stale copy).
 """
 import doctest
 import importlib
@@ -15,12 +18,20 @@ CURATED_MODULES = [
     "repro.core.features",
     "repro.data.batching",
     "repro.data.fusion",
+    "repro.data.prefetch",
+    "repro.data.store",
     "repro.autotuner.tile_autotuner",
     "repro.search.estimator",
     "repro.serving.cache",
     "repro.serving.coalescer",
     "repro.serving.service",
 ]
+
+
+def module_paths() -> list[str]:
+    """Repo-relative source file of every curated module (pure text
+    mapping — listing must not import jax-heavy modules)."""
+    return ["src/" + m.replace(".", "/") + ".py" for m in CURATED_MODULES]
 
 
 @pytest.mark.parametrize("module_name", CURATED_MODULES)
@@ -30,3 +41,25 @@ def test_module_doctests(module_name):
     assert result.attempted > 0, \
         f"{module_name} is curated but has no doctest examples"
     assert result.failed == 0
+
+
+def test_curated_paths_exist():
+    """The --list output (what CI consumes) must point at real files."""
+    import os
+    root = os.path.join(os.path.dirname(__file__), "..")
+    for p in module_paths():
+        assert os.path.exists(os.path.join(root, p)), f"missing {p}"
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--list", action="store_true",
+                    help="print the curated source files, one per line "
+                         "(consumed by the CI docs job)")
+    args = ap.parse_args()
+    if args.list:
+        print("\n".join(module_paths()))
+    else:
+        ap.error("nothing to do (did you mean --list, or pytest?)")

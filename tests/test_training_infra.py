@@ -100,8 +100,74 @@ def test_checkpoint_atomicity_ignores_partial(tmp_path):
 def test_checkpoint_shape_mismatch_raises(tmp_path):
     d = str(tmp_path / "ck")
     save_checkpoint(d, 1, {"w": jnp.ones((2,))})
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match=r"'w'.*\(2,\).*\(3,\)"):
         restore_checkpoint(d, {"w": jnp.ones((3,))})
+
+
+def test_checkpoint_keep_gc(tmp_path):
+    """`keep=` retention: oldest checkpoints are garbage-collected as new
+    ones land, the window can grow, and keep >= count keeps everything."""
+    d = str(tmp_path / "ck")
+    state = {"w": jnp.ones((2,))}
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(d, s, state, keep=2)
+    assert list_steps(d) == [4, 5]
+    # directories of GC'd steps are actually gone, not just unlisted
+    assert sorted(n for n in os.listdir(d) if n.startswith("step_")) == \
+        ["step_00000004", "step_00000005"]
+    save_checkpoint(d, 6, state, keep=10)      # widen: nothing collected
+    assert list_steps(d) == [4, 5, 6]
+    save_checkpoint(d, 7, state, keep=1)       # shrink: only the newest
+    assert list_steps(d) == [7]
+
+
+def test_checkpoint_keep_ignores_partial_dirs(tmp_path):
+    """A crashed writer's manifest-less dir must not consume a retention
+    slot (it is invisible to list_steps) nor survive as clutter forever —
+    GC only counts *complete* checkpoints."""
+    d = str(tmp_path / "ck")
+    state = {"w": jnp.ones((2,))}
+    save_checkpoint(d, 1, state, keep=2)
+    os.makedirs(os.path.join(d, "step_00000002"))      # partial, no manifest
+    save_checkpoint(d, 3, state, keep=2)
+    assert list_steps(d) == [1, 3]                     # both complete kept
+
+
+def test_checkpoint_restore_missing_leaf_raises_keyerror(tmp_path):
+    """Restoring into a template with a leaf the checkpoint never saved
+    (e.g. a model grown a parameter) fails loudly, naming the leaf."""
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 1, {"params": {"w": jnp.ones((2,))}})
+    template = {"params": {"w": jnp.ones((2,)), "extra": jnp.ones((3,))}}
+    with pytest.raises(KeyError, match="extra"):
+        restore_checkpoint(d, template)
+
+
+def test_checkpoint_restore_empty_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path / "nothing"), {"w": jnp.ones((2,))})
+
+
+def test_checkpoint_restore_explicit_step(tmp_path):
+    d = str(tmp_path / "ck")
+    for s in (1, 2, 3):
+        save_checkpoint(d, s, {"w": jnp.full((2,), float(s))}, keep=5)
+    restored, step, _ = restore_checkpoint(d, {"w": jnp.zeros((2,))}, step=2)
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(restored["w"]), [2.0, 2.0])
+
+
+def test_checkpoint_restore_shardings_tree_mismatch_raises(tmp_path):
+    """A shardings pytree with the wrong number of leaves is rejected
+    before any device_put happens."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    d = str(tmp_path / "ck")
+    state = {"a": jnp.ones((2,)), "b": jnp.ones((2,))}
+    save_checkpoint(d, 1, state)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    with pytest.raises(ValueError, match="shardings"):
+        restore_checkpoint(d, state,
+                           shardings={"a": NamedSharding(mesh, P())})
 
 
 def test_checkpoint_elastic_restore_with_shardings(tmp_path):
