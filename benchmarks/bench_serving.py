@@ -19,7 +19,10 @@ prediction delta <1e-4 (features go through a fitted FeatureNormalizer —
 unnormalized f32 features lose the tolerance to summation-order effects).
 
 Margins (see BENCH_SCALE semantics in benchmarks/common.py): ~2.07x at
-BENCH_SCALE=0.5, so CI runs this benchmark unscaled. Since PR 3 the
+BENCH_SCALE=0.5 — scaled runs gate against the calibrated
+`service_speedup_threshold(scale)` instead of the full-scale 2x, so the
+gate stays *binding* at every scale (previously a sub-1.0 scale only
+printed a warning and still gated at 2x). Since PR 3 the
 shared structural EncodeCache also accelerates the *direct* baseline
 (tile sweeps no longer re-encode per config), which narrows the
 full-scale margin from ~3.4x to ~2.6x — the gate measures caching of
@@ -50,13 +53,41 @@ ROUNDS = 4
 SUBSET = 0.75
 
 
+def service_speedup_threshold(scale: float) -> float:
+    """Calibrated gate threshold for `service_speedup` at a given
+    BENCH_SCALE (same idea as bench_corpus's capacity-aware gate: a scaled
+    run keeps a *binding* gate instead of a warning nobody reads).
+
+    At scale>=1.0 the stream is large enough to amortize per-request
+    overhead and the full 2x contract applies. Smaller scales shrink the
+    revisit stream (fewer programs -> fewer duplicate queries -> lower hit
+    rate), so the achievable speedup degrades roughly with the scale
+    deficit; measured: ~2.6x at 1.0, ~2.07x at 0.5. The floor of 1.25x
+    keeps the gate meaningful at any scale: the service must always beat
+    direct scoring, warm-cache or not.
+
+    >>> service_speedup_threshold(1.0)
+    2.0
+    >>> service_speedup_threshold(2.0)
+    2.0
+    >>> service_speedup_threshold(0.5)
+    1.5
+    >>> service_speedup_threshold(0.0)
+    1.25
+    """
+    if scale >= 1.0:
+        return 2.0
+    return max(1.25, 2.0 - (1.0 - scale))
+
+
 def main() -> int:
     import time
     t_start = time.perf_counter()
+    threshold = service_speedup_threshold(SCALE)
     if SCALE < 1.0:
-        print(f"[warn] BENCH_SCALE={SCALE}: the 2x gate margin is ~2.07x "
-              "at 0.5 — run unscaled for a binding verdict "
-              "(benchmarks/common.py)", file=sys.stderr)
+        print(f"[info] BENCH_SCALE={SCALE}: gating service_speedup at the "
+              f"calibrated {threshold:.2f}x instead of the full-scale 2x "
+              "(see service_speedup_threshold)", file=sys.stderr)
     replay = build_tile_replay(NUM_PROGRAMS, max_configs=MAX_CONFIGS,
                                rounds=ROUNDS, subset=SUBSET, seed=0)
     max_nodes = max(g.num_nodes for r in replay.requests for g in r)
@@ -101,14 +132,15 @@ def main() -> int:
     from common import Gate, emit_json
     ok = emit_json(
         "serving",
-        [Gate("service_speedup", speedup, 2.0),
+        [Gate("service_speedup", speedup, threshold),
          Gate("prediction_delta", err, 1e-4, "<")],
         wall_s=time.perf_counter() - t_start,
         extra={"hit_rate": stats.hit_rate, "flushes": stats.flushes,
                "latency_p50_ms": stats.latency_p50_ms,
-               "latency_p99_ms": stats.latency_p99_ms})
+               "latency_p99_ms": stats.latency_p99_ms,
+               "scale": SCALE})
     print(f"bench_serving: {'PASS' if ok else 'FAIL'} "
-          f"(need >=2x speedup and <1e-4 prediction delta)")
+          f"(need >={threshold:.2f}x speedup and <1e-4 prediction delta)")
     return 0 if ok else 1
 
 

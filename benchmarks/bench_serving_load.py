@@ -1,0 +1,285 @@
+"""Multi-process load test for the cost-model socket server
+(docs/SERVING.md §server; acceptance gate for serving-at-load).
+
+Three phases against `repro.serving.server.CostModelServer`:
+
+  * load   — N client *processes* (spawn, jax-free: the client module is
+    numpy+stdlib) replay disjoint slices of the deterministic tile-search
+    stream (`repro.serving.replay`) concurrently. Gates: sustained
+    throughput >= 200 queries/s from >= 4 clients, bounded p99 request
+    latency, and ZERO divergence from direct in-process
+    `predict_kernels` (each request ships its expected scores; float32
+    survives the JSON double round trip exactly).
+  * shed   — a throttled server (tiny admission queue + a `delay`
+    FaultPolicy slowing the scoring worker) is deliberately saturated.
+    Gates: requests are shed with explicit `overloaded` errors (never
+    silently dropped — client send counts and server counters must both
+    add up exactly) and the server serves normally once the throttle
+    lifts.
+  * warm   — the load-phase server's cache snapshot restarts a *fresh*
+    service, which must answer the first replay of the same stream
+    >= 90% from disk (it measures 100%: every unique graph was snapshot).
+
+Work counts scale with BENCH_SCALE (replay repeats/programs — never
+kernel sizes); the gates are per-second or exactness criteria and stay
+binding at any scale.
+
+  PYTHONPATH=src python benchmarks/bench_serving_load.py
+"""
+from __future__ import annotations
+
+import json
+import multiprocessing
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+SCALE = float(os.environ.get("BENCH_SCALE", "1.0"))
+NUM_CLIENTS = 4
+NUM_PROGRAMS = max(int(4 * SCALE), 3)
+MAX_CONFIGS = 8
+ROUNDS = 3
+SUBSET = 0.75
+REPEATS = max(int(12 * SCALE), 3)    # passes each client makes over its slice
+DEADLINE_MS = 30_000.0
+
+
+# ---------------------------------------------------------------------------
+# Client process (spawn target — stays jax-free; the module re-import in
+# the child only pays numpy + repro.serving.client)
+# ---------------------------------------------------------------------------
+def _client_worker(host: str, port: int, req_path: str,
+                   out_path: str) -> None:
+    from repro.core.graph import KernelGraph
+    from repro.serving.client import ClientError, CostModelClient
+
+    with open(req_path) as f:
+        spec = json.load(f)
+    requests = [([KernelGraph.from_dict(g) for g in r["graphs"]],
+                 np.asarray(r["expect"], np.float32))
+                for r in spec["requests"]]
+    latencies, errors = [], {}
+    sent = ok = queries = 0
+    divergence = 0.0
+    t0 = time.perf_counter()
+    with CostModelClient(host, port, retries=3) as client:
+        for ri in range(spec["repeats"]):
+            # pass 0 fills the server's cold prediction cache (scoring
+            # passes, hundreds of ms); the sustained-QPS/p99 gates measure
+            # the steady state, so timing starts at pass 1
+            timed = ri > 0
+            if ri == 1:
+                t0 = time.perf_counter()
+            for graphs, expect in requests:
+                sent += 1
+                t_req = time.perf_counter()
+                try:
+                    scores = client.predict_many(graphs,
+                                                 deadline_ms=DEADLINE_MS)
+                except ClientError as e:
+                    errors[type(e).__name__] = \
+                        errors.get(type(e).__name__, 0) + 1
+                    continue
+                ok += 1
+                if timed:
+                    latencies.append((time.perf_counter() - t_req) * 1e3)
+                    queries += len(graphs)
+                divergence = max(divergence,
+                                 float(np.max(np.abs(scores - expect))))
+    with open(out_path, "w") as f:
+        json.dump({"sent": sent, "ok": ok, "queries": queries,
+                   "errors": errors, "latencies_ms": latencies,
+                   "max_divergence": divergence,
+                   "t0": t0, "t1": time.perf_counter()}, f)
+
+
+def main() -> int:
+    t_start = time.perf_counter()
+    import tempfile
+
+    import jax
+
+    from common import Gate, emit_json
+    from repro.core.evaluate import make_predict_fn, predict_kernels
+    from repro.core.model import CostModelConfig, cost_model_init
+    from repro.serving import CostModelService
+    from repro.serving.replay import build_tile_replay, run_replay
+    from repro.serving.client import CostModelClient, Overloaded
+    from repro.serving.server import CostModelServer, FaultPolicy
+
+    replay = build_tile_replay(NUM_PROGRAMS, max_configs=MAX_CONFIGS,
+                               rounds=ROUNDS, subset=SUBSET, seed=0)
+    max_nodes = max(g.num_nodes for r in replay.requests for g in r)
+    cfg = CostModelConfig(gnn="graphsage", reduction="column_wise",
+                          hidden_dim=48, opcode_embed_dim=16, dropout=0.0,
+                          max_nodes=max_nodes, adjacency="sparse")
+    params = cost_model_init(jax.random.key(0), cfg)
+    predict_fn = make_predict_fn(cfg)
+    print(f"bench_serving_load: {replay.num_kernels} kernels, "
+          f"{len(replay.requests)} requests x {REPEATS} repeats x "
+          f"{NUM_CLIENTS} clients, {replay.num_queries} queries/pass "
+          f"({replay.num_unique} unique graphs)")
+
+    def make_service() -> CostModelService:
+        return CostModelService(params, cfg, replay.normalizer,
+                                predict_fn=predict_fn)
+
+    def direct(graphs):
+        return predict_kernels(params, cfg, graphs, replay.normalizer,
+                               max_nodes=max_nodes, predict_fn=predict_fn)
+
+    # ground truth for the divergence gate; also warms every jit bucket
+    # either path can hit, so the timed phase measures steady-state serving
+    expects, _ = run_replay(direct, replay.requests)
+    run_replay(make_service().predict_many, replay.requests)
+
+    tmp = tempfile.mkdtemp(prefix="bench_serving_load_")
+    snap = os.path.join(tmp, "warm-cache.npz")
+
+    # ---- phase 1: concurrent load ----------------------------------------
+    service = make_service()
+    server = CostModelServer(service, max_queue=256,
+                             snapshot_path=snap).start()
+    host, port = server.address
+    ctx = multiprocessing.get_context("spawn")   # children must not fork
+    procs, outs = [], []                         # the jax-laden parent
+    for ci in range(NUM_CLIENTS):
+        slice_reqs = [{"graphs": [g.to_dict() for g in r],
+                       "expect": [float(s) for s in e]}
+                      for i, (r, e) in enumerate(zip(replay.requests,
+                                                     expects))
+                      if i % NUM_CLIENTS == ci]
+        req_path = os.path.join(tmp, f"reqs_{ci}.json")
+        out_path = os.path.join(tmp, f"out_{ci}.json")
+        with open(req_path, "w") as f:
+            json.dump({"requests": slice_reqs, "repeats": REPEATS}, f)
+        outs.append(out_path)
+        procs.append(ctx.Process(target=_client_worker,
+                                 args=(host, port, req_path, out_path)))
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join(timeout=600)
+    assert all(p.exitcode == 0 for p in procs), \
+        [f"client exit {p.exitcode}" for p in procs]
+    reports = []
+    for path in outs:
+        with open(path) as f:
+            reports.append(json.load(f))
+    load_stats = server.stats
+    svc_stats = service.stats()
+    server.stop()                                # writes the warm snapshot
+
+    sent = sum(r["sent"] for r in reports)
+    ok = sum(r["ok"] for r in reports)
+    typed_errors = sum(sum(r["errors"].values()) for r in reports)
+    queries = sum(r["queries"] for r in reports)
+    window = max(r["t1"] for r in reports) - min(r["t0"] for r in reports)
+    qps = queries / window
+    lat = np.sort(np.concatenate(
+        [np.asarray(r["latencies_ms"]) for r in reports]))
+    p50, p99 = (float(np.percentile(lat, q)) for q in (50, 99))
+    divergence = max(r["max_divergence"] for r in reports)
+    accounted = (sent == ok + typed_errors
+                 and load_stats.requests == load_stats.completed
+                 + load_stats.shed_overloaded + load_stats.shed_deadline
+                 + load_stats.worker_failures)
+    print(f"  load: {qps:8.0f} queries/s over {window:.2f}s "
+          f"({NUM_CLIENTS} procs, {ok}/{sent} ok, p50={p50:.2f}ms "
+          f"p99={p99:.2f}ms, hit_rate={svc_stats.hit_rate:.1%})")
+    print(f"  divergence vs direct: {divergence:.2e}")
+
+    # ---- phase 2: forced saturation sheds explicitly, then recovers ------
+    shed_server = CostModelServer(
+        service, max_queue=2, coalesce_limit=1,
+        fault_policy=FaultPolicy("delay", every=1, delay_s=0.02)).start()
+    shost, sport = shed_server.address
+    shed_sent = shed_ok = shed_rejected = 0
+    import threading
+
+    def hammer():
+        nonlocal shed_sent, shed_ok, shed_rejected
+        with CostModelClient(shost, sport, retries=0) as c:
+            for i in range(12):
+                with lock:
+                    shed_sent += 1
+                try:
+                    c.predict_many(replay.requests[i % len(replay.requests)],
+                                   deadline_ms=DEADLINE_MS)
+                    with lock:
+                        shed_ok += 1
+                except Overloaded:
+                    with lock:
+                        shed_rejected += 1
+
+    lock = threading.Lock()
+    threads = [threading.Thread(target=hammer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+    shed_stats = shed_server.stats
+    shed_accounted = (shed_sent == shed_ok + shed_rejected
+                      and shed_stats.requests == shed_stats.completed
+                      + shed_stats.shed_overloaded + shed_stats.shed_deadline
+                      + shed_stats.worker_failures)
+    # lift the throttle: the same server must serve normally again
+    shed_server.fault_policy = None
+    with CostModelClient(shost, sport) as c:
+        recovered = c.predict_many(replay.requests[0],
+                                   deadline_ms=DEADLINE_MS).shape[0] \
+            == len(replay.requests[0])
+    shed_server.stop()
+    print(f"  shed: {shed_rejected}/{shed_sent} rejected `overloaded` "
+          f"under saturation, {shed_ok} served, recovered={recovered}")
+
+    # ---- phase 3: warm restart answers the first replay from disk --------
+    warm_service = make_service()
+    warm_server = CostModelServer(warm_service, snapshot_path=snap).start()
+    with CostModelClient(*warm_server.address) as c:
+        warm_preds, _ = run_replay(
+            lambda gs: c.predict_many(gs, deadline_ms=DEADLINE_MS),
+            replay.requests)
+    warm_stats = warm_service.stats()
+    warm_hit_rate = warm_stats.hit_rate
+    warm_exact = max(float(np.max(np.abs(a - b)))
+                     for a, b in zip(warm_preds, expects))
+    warm_server.stop()
+    print(f"  warm: restored {warm_server.stats.restored_entries} entries, "
+          f"first-replay hit_rate={warm_hit_rate:.1%}, "
+          f"divergence {warm_exact:.2e}")
+
+    gates = [
+        Gate("num_clients", NUM_CLIENTS, 4),
+        Gate("sustained_qps", qps, 200.0),
+        Gate("latency_p99_ms", p99, 250.0, "<="),
+        Gate("prediction_divergence", divergence, 0.0, "<="),
+        Gate("no_silent_drops", bool(accounted and shed_accounted), True,
+             "=="),
+        Gate("shed_overloaded", shed_rejected, 1),
+        Gate("shed_recovered", bool(recovered), True, "=="),
+        Gate("warm_restart_hit_rate", warm_hit_rate, 0.9),
+        Gate("warm_restart_divergence", warm_exact, 0.0, "<="),
+    ]
+    ok_all = emit_json(
+        "serving_load", gates, wall_s=time.perf_counter() - t_start,
+        extra={"queries": queries, "window_s": round(window, 3),
+               "latency_p50_ms": round(p50, 3),
+               "hit_rate": svc_stats.hit_rate,
+               "reconnect_errors": typed_errors,
+               "server": load_stats.to_dict(),
+               "shed_server": shed_stats.to_dict(),
+               "restored_entries": warm_server.stats.restored_entries,
+               "scale": SCALE})
+    print(f"bench_serving_load: {'PASS' if ok_all else 'FAIL'} "
+          f"(need >=200 q/s from >={NUM_CLIENTS} clients, p99<=250ms, "
+          f"0 divergence, explicit shedding, warm hit rate >=90%)")
+    return 0 if ok_all else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -453,9 +453,27 @@ def _graphbatch_unflatten(_, children):
     return GraphBatch(*children)
 
 
-import jax.tree_util as _jtu  # noqa: E402
+_PYTREES_REGISTERED = False
 
-_jtu.register_pytree_node(GraphBatch, _graphbatch_flatten, _graphbatch_unflatten)
+
+def register_pytrees() -> None:
+    """Register `GraphBatch` / `SparseGraphBatch` as jax pytrees.
+
+    Idempotent, and deliberately NOT a module-import side effect: this
+    module is otherwise numpy-only, and its cheap consumers — the socket
+    serving client, the replay-stream builder, feature normalizer fitting
+    — must not pay the jax import. Every jit consumer reaches batches
+    through `repro.core.model`, which calls this at import time.
+    """
+    global _PYTREES_REGISTERED
+    if _PYTREES_REGISTERED:
+        return
+    import jax.tree_util as jtu
+    jtu.register_pytree_node(GraphBatch, _graphbatch_flatten,
+                             _graphbatch_unflatten)
+    jtu.register_pytree_node(SparseGraphBatch, _sparsebatch_flatten,
+                             _sparsebatch_unflatten)
+    _PYTREES_REGISTERED = True
 
 
 def encode_graph(g: KernelGraph, n_max: int,
@@ -549,10 +567,6 @@ def _sparsebatch_flatten(b: SparseGraphBatch):
 
 def _sparsebatch_unflatten(_, children):
     return SparseGraphBatch(*children)
-
-
-_jtu.register_pytree_node(SparseGraphBatch, _sparsebatch_flatten,
-                          _sparsebatch_unflatten)
 
 
 def encode_sparse_batch(graphs: Sequence[KernelGraph],

@@ -32,6 +32,10 @@ from repro.nn.core import (
     mlp_init,
 )
 
+# batches must be jit-traceable before any apply; features.py defers this
+# so its numpy-only consumers never import jax
+F.register_pytrees()
+
 
 @dataclass
 class CostModelConfig:

@@ -11,6 +11,20 @@ speedup plus the max prediction delta between the two paths.
   PYTHONPATH=src python -m repro.launch.serve_costmodel \\
       --programs 8 --rounds 4 --compare-direct
 
+Two additional modes expose the same service over a socket
+(`repro.serving.server`, docs/SERVING.md §server):
+
+  # serve: build the model once, answer predict requests until ^C
+  PYTHONPATH=src python -m repro.launch.serve_costmodel \\
+      --listen 127.0.0.1:7450 --snapshot /tmp/warm.npz
+
+  # connect: replay the query stream against a running server
+  PYTHONPATH=src python -m repro.launch.serve_costmodel \\
+      --connect 127.0.0.1:7450
+
+`--connect` never imports jax — the graphs travel as JSON and scoring
+happens server-side — so replay clients are cheap to fan out.
+
 Flags:
   --programs N        synthetic programs in the corpus        (default 8)
   --max-configs N     tile candidates per kernel              (default 16)
@@ -24,12 +38,100 @@ Flags:
                       throughput does not depend on training)
   --seed N            corpus/model seed                       (default 0)
   --compare-direct    also time uncached per-request scoring
+  --listen H:P        serve over a socket instead of replaying locally
+  --connect H:P       replay against a running --listen server (no jax)
+  --max-queue N       --listen: admission queue bound         (default 64)
+  --deadline-ms F     --listen: default per-request deadline  (default none)
+  --snapshot PATH     --listen: warm-cache npz (restored at start,
+                      written at shutdown)
 """
 from __future__ import annotations
 
 import argparse
 
 import numpy as np
+
+
+def _host_port(spec: str) -> tuple[str, int]:
+    host, _, port = spec.rpartition(":")
+    if not host or not port.isdigit():
+        raise argparse.ArgumentTypeError(
+            f"expected HOST:PORT, got {spec!r}")
+    return host, int(port)
+
+
+def _serve(args) -> int:
+    """--listen: stand up the model + socket server, block until ^C."""
+    import jax
+
+    from repro.core.evaluate import make_predict_fn
+    from repro.core.model import CostModelConfig, cost_model_init
+    from repro.serving import CostModelService
+    from repro.serving.replay import build_tile_replay
+    from repro.serving.server import CostModelServer
+
+    replay = build_tile_replay(args.programs, max_configs=args.max_configs,
+                               rounds=args.rounds, subset=args.subset,
+                               seed=args.seed)
+    max_nodes = max(g.num_nodes for r in replay.requests for g in r)
+    cfg = CostModelConfig(gnn="graphsage", reduction="column_wise",
+                          hidden_dim=args.hidden_dim, opcode_embed_dim=16,
+                          dropout=0.0, max_nodes=max_nodes,
+                          adjacency=args.adjacency)
+    params = cost_model_init(jax.random.key(args.seed), cfg)
+    service = CostModelService(params, cfg, replay.normalizer,
+                               cache_capacity=args.cache_capacity,
+                               node_budget=args.node_budget,
+                               chunk=args.chunk,
+                               predict_fn=make_predict_fn(cfg))
+    host, port = args.listen
+    server = CostModelServer(service, host=host, port=port,
+                             max_queue=args.max_queue,
+                             default_deadline_ms=args.deadline_ms,
+                             snapshot_path=args.snapshot)
+    server.start()
+    bound = server.address
+    print(f"serving cost model on {bound[0]}:{bound[1]} "
+          f"(max_queue={args.max_queue}, "
+          f"restored {server.stats.restored_entries} warm entries); ^C stops")
+    try:
+        import threading
+        threading.Event().wait()       # serve until interrupted
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.stop()
+        print(f"stopped; served {server.stats.completed} requests "
+              f"({server.stats.shed_overloaded} shed)")
+    return 0
+
+
+def _connect(args) -> int:
+    """--connect: replay the query stream through a running server.
+
+    Stays jax-free: graphs are built with numpy and scored remotely."""
+    from repro.serving.client import CostModelClient
+    from repro.serving.replay import build_tile_replay, run_replay
+
+    replay = build_tile_replay(args.programs, max_configs=args.max_configs,
+                               rounds=args.rounds, subset=args.subset,
+                               seed=args.seed)
+    host, port = args.connect
+    with CostModelClient(host, port) as client:
+        client.ping()
+        _, dt = run_replay(
+            lambda gs: client.predict_many(gs, deadline_ms=args.deadline_ms),
+            replay.requests)
+        stats = client.stats()
+    print(f"replayed {replay.num_queries} queries "
+          f"({len(replay.requests)} requests) in {dt:.2f}s -> "
+          f"{replay.num_queries / dt:.0f} queries/s")
+    svc = stats["service"]
+    print(f"server: hit_rate={svc['hit_rate']:.1%} "
+          f"flushes={svc['flushes']} "
+          f"completed={stats['server']['completed']} "
+          f"shed={stats['server']['shed_overloaded']}")
+    return 0
 
 
 def main() -> int:
@@ -48,7 +150,18 @@ def main() -> int:
     ap.add_argument("--hidden-dim", type=int, default=48)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--compare-direct", action="store_true")
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--listen", type=_host_port, metavar="HOST:PORT")
+    mode.add_argument("--connect", type=_host_port, metavar="HOST:PORT")
+    ap.add_argument("--max-queue", type=int, default=64)
+    ap.add_argument("--deadline-ms", type=float, default=None)
+    ap.add_argument("--snapshot", default=None)
     args = ap.parse_args()
+
+    if args.listen:
+        return _serve(args)
+    if args.connect:
+        return _connect(args)
 
     import jax
 

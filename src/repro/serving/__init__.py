@@ -1,26 +1,73 @@
-"""Cost-model prediction service (docs/SERVING.md, docs/API.md).
+"""Cost-model prediction serving (docs/SERVING.md, docs/API.md).
 
 The serving layer between clients (autotuners, fusion/tile evaluators,
-future compiler hooks) and the GNN:
+remote search processes, future compiler hooks) and the GNN:
 
-* `PredictionCache` — content-addressed LRU keyed by
-  `KernelGraph.canonical_hash()`;
+* `PredictionCache` — content-addressed, thread-safe LRU keyed by
+  `KernelGraph.canonical_hash()`, with npz snapshot/restore for warm
+  restarts;
 * `RequestCoalescer` — accumulates cache-miss graphs and flushes them
-  through the bucketed sparse batcher in one call;
-* `CostModelService` — the facade: `predict_many`, deferred `submit`,
-  drop-in `tile_scorer`/`runtime_predictor`/`cost_fn` adapters, and a
-  `stats()` surface (hit rate, bucket occupancy, flush sizes, latency).
-"""
-from repro.serving.cache import CacheStats, PredictionCache
-from repro.serving.coalescer import RequestCoalescer, Ticket
-from repro.serving.service import (
-    BucketStats,
-    CostModelService,
-    PendingRequest,
-    ServiceStats,
-)
+  through the bucketed sparse batcher in one call (thread-safe);
+* `CostModelService` — the in-process facade: `predict_many`, deferred
+  `submit`, drop-in `tile_scorer`/`runtime_predictor`/`cost_fn`
+  adapters, and a `stats()` surface;
+* `CostModelServer` / `CostModelClient` — the persistent multi-tenant
+  socket layer on top: length-prefixed-JSON protocol, bounded-queue
+  admission with explicit `overloaded`/`deadline_exceeded` shedding,
+  cross-client coalescing, warm-cache persistence, and structured fault
+  injection (`FaultPolicy`) for the test suite.
 
-__all__ = [
-    "CacheStats", "PredictionCache", "RequestCoalescer", "Ticket",
-    "BucketStats", "CostModelService", "PendingRequest", "ServiceStats",
-]
+Exports resolve lazily (PEP 562): importing `repro.serving` — or the
+protocol/client side directly — does NOT pull in jax. `CostModelService`
+(which imports the encoding/batching stack) triggers the real import on
+first touch, so load-test client *processes* stay jax-free.
+"""
+import importlib
+
+_EXPORTS = {
+    # cache + coalescer (numpy-only)
+    "CacheStats": "repro.serving.cache",
+    "PredictionCache": "repro.serving.cache",
+    "SnapshotFormatError": "repro.serving.cache",
+    "RequestCoalescer": "repro.serving.coalescer",
+    "Ticket": "repro.serving.coalescer",
+    # socket server/client/protocol (numpy+stdlib only)
+    "CostModelServer": "repro.serving.server",
+    "FaultPolicy": "repro.serving.server",
+    "FrameError": "repro.serving.server",
+    "ServerStats": "repro.serving.server",
+    "CostModelClient": "repro.serving.client",
+    "ClientError": "repro.serving.client",
+    "DeadlineExceeded": "repro.serving.client",
+    "Overloaded": "repro.serving.client",
+    "ProtocolError": "repro.serving.client",
+    "ServerShutdown": "repro.serving.client",
+    "WorkerFailure": "repro.serving.client",
+    # in-process service facade (imports jax via core.features)
+    "BucketStats": "repro.serving.service",
+    "CostModelService": "repro.serving.service",
+    "PendingRequest": "repro.serving.service",
+    "ServiceStats": "repro.serving.service",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    target = _EXPORTS.get(name)
+    if target is not None:
+        value = getattr(importlib.import_module(target), name)
+        globals()[name] = value      # cache: next access skips __getattr__
+        return value
+    try:                             # `repro.serving.replay`-style access
+        return importlib.import_module(f"{__name__}.{name}")
+    except ModuleNotFoundError as e:
+        if e.name != f"{__name__}.{name}":
+            raise                    # real dependency failure inside the
+                                     # submodule (e.g. jax missing)
+        raise AttributeError(
+            f"module 'repro.serving' has no attribute {name!r}") from None
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

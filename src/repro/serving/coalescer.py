@@ -10,6 +10,13 @@ pending set is handed to the scoring backend in one call, which packs it
 through the bucketed sparse batcher (`repro.data.batching`) so only a few
 jit executables serve arbitrary traffic.
 
+`add` and `flush` are thread-safe: one re-entrant lock guards the pending
+set *and* the scoring call, so concurrent clients (the socket server's
+scoring worker, `CostModelService.submit` callers on other threads) can
+never double-flush a batch or lose a ticket — a flush atomically claims
+the pending set, and every claimed ticket is resolved before the lock
+drops.
+
 >>> import numpy as np
 >>> from repro.data.synthetic import random_kernel
 >>> co = RequestCoalescer(
@@ -28,6 +35,7 @@ True
 """
 from __future__ import annotations
 
+import threading
 from collections import deque
 from typing import Callable, Sequence
 
@@ -66,6 +74,8 @@ class RequestCoalescer:
         self.score_fn = score_fn
         self.node_budget = int(node_budget)
         self.on_scored = on_scored
+        # re-entrant: the auto-flush inside `add` re-enters `flush`
+        self._lock = threading.RLock()
         self._pending: dict[str, tuple[KernelGraph, Ticket]] = {}
         self._pending_nodes = 0
         self.flushes = 0
@@ -85,35 +95,40 @@ class RequestCoalescer:
     def add(self, key: str, graph: KernelGraph) -> Ticket:
         """Register a miss; returns its (possibly shared) ticket. Flushes
         automatically once the pending set reaches `node_budget` nodes."""
-        entry = self._pending.get(key)
-        if entry is not None:
-            self.coalesced += 1
-            return entry[1]
-        ticket = Ticket()
-        self._pending[key] = (graph, ticket)
-        self._pending_nodes += graph.num_nodes
-        if self._pending_nodes >= self.node_budget:
-            self.flush()
-        return ticket
+        with self._lock:
+            entry = self._pending.get(key)
+            if entry is not None:
+                self.coalesced += 1
+                return entry[1]
+            ticket = Ticket()
+            self._pending[key] = (graph, ticket)
+            self._pending_nodes += graph.num_nodes
+            if self._pending_nodes >= self.node_budget:
+                self.flush()
+            return ticket
 
     def flush(self) -> None:
         """Score every pending graph in one backend call and resolve all
-        tickets. No-op when nothing is pending."""
-        if not self._pending:
-            return
-        keys = list(self._pending)
-        graphs = [self._pending[k][0] for k in keys]
-        tickets = [self._pending[k][1] for k in keys]
-        self._pending = {}
-        self._pending_nodes = 0
-        preds = np.asarray(self.score_fn(graphs), np.float32)
-        if preds.shape != (len(graphs),):
-            raise ValueError(f"score_fn returned shape {preds.shape}, "
-                             f"expected ({len(graphs)},)")
-        self.flushes += 1
-        self.flush_sizes.append(len(graphs))
-        self.flush_nodes.append(sum(g.num_nodes for g in graphs))
-        for key, ticket, p in zip(keys, tickets, preds):
-            ticket.value = float(p)
-            if self.on_scored is not None:
-                self.on_scored(key, float(p))
+        tickets. No-op when nothing is pending. If the backend raises
+        (a dying worker, an injected fault), the claimed tickets stay
+        unresolved and the pending set stays empty — callers observe a
+        clean failure, later adds start a fresh batch."""
+        with self._lock:
+            if not self._pending:
+                return
+            keys = list(self._pending)
+            graphs = [self._pending[k][0] for k in keys]
+            tickets = [self._pending[k][1] for k in keys]
+            self._pending = {}
+            self._pending_nodes = 0
+            preds = np.asarray(self.score_fn(graphs), np.float32)
+            if preds.shape != (len(graphs),):
+                raise ValueError(f"score_fn returned shape {preds.shape}, "
+                                 f"expected ({len(graphs)},)")
+            self.flushes += 1
+            self.flush_sizes.append(len(graphs))
+            self.flush_nodes.append(sum(g.num_nodes for g in graphs))
+            for key, ticket, p in zip(keys, tickets, preds):
+                ticket.value = float(p)
+                if self.on_scored is not None:
+                    self.on_scored(key, float(p))

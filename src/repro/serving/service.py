@@ -27,6 +27,7 @@ sizes, p50/p99 latency).
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -160,6 +161,10 @@ class CostModelService:
                                           node_budget=self.node_budget,
                                           on_scored=self.cache.put)
         self._bucket_use: dict[BucketSpec | str, list[float]] = {}
+        # cache and coalescer are internally locked; this lock only guards
+        # the service-level counters, so submit() is safe from any thread
+        # (the socket server's connection threads + scoring worker)
+        self._stats_lock = threading.Lock()
         self._requests = 0
         self._graphs = 0
         self._latencies_ms: deque[float] = deque(maxlen=4096)
@@ -213,8 +218,9 @@ class CostModelService:
         resolve immediately, misses coalesce with other in-flight requests
         (identical graphs share one ticket). Call `.result()` — or let the
         node-budget auto-flush fire — to resolve."""
-        self._requests += 1
-        self._graphs += len(graphs)
+        with self._stats_lock:
+            self._requests += 1
+            self._graphs += len(graphs)
         entries: list[float | Ticket] = []
         for g in graphs:
             key = self.cache_key(g)
@@ -238,14 +244,31 @@ class CostModelService:
         """Force-score everything pending in the coalescer."""
         self.coalescer.flush()
 
+    # --- warm-cache persistence (docs/SERVING.md §warm cache) --------------
+    # A snapshot is only sound for a service bound to the same frozen
+    # (params, model config, normalizer) triple that produced it — the
+    # cache key does not encode the model. The server stamps its snapshot
+    # path per model; these helpers just delegate to the cache.
+    def snapshot_cache(self, path: str) -> int:
+        """Persist the prediction cache to `path` (atomic npz; see
+        `PredictionCache.snapshot`). Returns the entry count."""
+        return self.cache.snapshot(path)
+
+    def restore_cache(self, path: str) -> int:
+        """Warm-start the prediction cache from a `snapshot_cache` file.
+        Returns the number of entries loaded."""
+        return self.cache.restore(path)
+
     def stats(self) -> ServiceStats:
         buckets = {
             spec: BucketStats(flushes=int(u[0]), graphs=int(u[1]),
                               mean_node_occupancy=u[2] / u[0])
-            for spec, u in self._bucket_use.items()}
+            for spec, u in dict(self._bucket_use).items()}
         lat = list(self._latencies_ms)
+        with self._stats_lock:
+            requests, graphs = self._requests, self._graphs
         return ServiceStats(
-            requests=self._requests, graphs=self._graphs,
+            requests=requests, graphs=graphs,
             cache=self.cache.stats(), coalesced=self.coalescer.coalesced,
             flushes=self.coalescer.flushes,
             flush_sizes=tuple(self.coalescer.flush_sizes), buckets=buckets,

@@ -1,6 +1,8 @@
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 # Smoke tests and benches must see exactly the real device count (1 CPU).
@@ -16,3 +18,45 @@ except ImportError:
     sys.path.insert(0, os.path.dirname(__file__))
     import _hypothesis_stub
     _hypothesis_stub.install(sys.modules)
+
+
+# ---------------------------------------------------------------------------
+# @pytest.mark.timeout(seconds) — fail fast instead of hanging the job.
+#
+# The server/concurrency suite (tests/test_server.py) talks to sockets and
+# joins threads; a deadlock there must fail the test, not wedge tier-1.
+# When the real pytest-timeout plugin is installed it owns the marker; this
+# SIGALRM fallback covers environments without it (main-thread blocking
+# calls — socket recv, lock/queue waits — are interrupted by the signal).
+# ---------------------------------------------------------------------------
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "timeout(seconds): fail the test if it runs longer than `seconds` "
+        "(SIGALRM fallback when pytest-timeout is not installed)")
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    marker = item.get_closest_marker("timeout")
+    have_plugin = item.config.pluginmanager.hasplugin("timeout")
+    import signal
+    if (marker is None or have_plugin
+            or not hasattr(signal, "SIGALRM")
+            or not hasattr(signal, "setitimer")):
+        yield
+        return
+    seconds = float(marker.args[0]) if marker.args else 60.0
+
+    def _on_alarm(signum, frame):
+        raise TimeoutError(
+            f"{item.nodeid} exceeded its {seconds:.0f}s timeout "
+            "(deadlocked server/thread?)")
+
+    old = signal.signal(signal.SIGALRM, _on_alarm)
+    signal.setitimer(signal.ITIMER_REAL, seconds)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0)
+        signal.signal(signal.SIGALRM, old)

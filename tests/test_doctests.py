@@ -24,6 +24,7 @@ CURATED_MODULES = [
     "repro.search.estimator",
     "repro.serving.cache",
     "repro.serving.coalescer",
+    "repro.serving.server",
     "repro.serving.service",
 ]
 

@@ -1,5 +1,7 @@
 """Prediction-service tests: canonical hashing, cache accounting,
 coalescing, and parity with the direct scoring path (docs/SERVING.md)."""
+import os
+
 import jax
 import numpy as np
 import pytest
@@ -307,3 +309,164 @@ def test_service_stats_surface(world):
                              for b in s.buckets.values())
     assert sum(b.graphs for b in s.buckets.values()) == s.cache.misses
     assert "hit_rate" in s.summary()
+
+# ---------------------------------------------------------------------------
+# Property-based: PredictionCache vs a reference LRU model
+# ---------------------------------------------------------------------------
+from collections import OrderedDict  # noqa: E402
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serving.cache import SnapshotFormatError  # noqa: E402,F401
+
+
+def _apply_ops(cache, ops):
+    """Drive `cache` and an OrderedDict reference LRU with the same op
+    stream; returns the reference. Each op is (key_idx, is_put, value)."""
+    ref: OrderedDict[str, float] = OrderedDict()
+    for key_idx, is_put, value in ops:
+        key = f"k{key_idx}"
+        if is_put:
+            cache.put(key, value)
+            if key in ref:
+                ref.move_to_end(key)
+            ref[key] = float(value)
+            if len(ref) > cache.capacity:
+                ref.popitem(last=False)
+        else:
+            got = cache.get(key)
+            want = ref.get(key)
+            if want is not None:
+                ref.move_to_end(key)
+            assert got == want, (key, got, want)
+    return ref
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=7), min_size=0,
+                max_size=60),
+       st.lists(st.booleans(), min_size=60, max_size=60),
+       st.integers(min_value=1, max_value=5))
+def test_cache_property_matches_reference_lru(keys, puts, capacity):
+    """Any interleaving of put/get against any capacity keeps the cache's
+    contents, LRU order, and size accounting identical to a textbook
+    OrderedDict LRU."""
+    cache = PredictionCache(capacity)
+    ops = [(k, p, float(k) * 1.5 + i)
+           for i, (k, p) in enumerate(zip(keys, puts))]
+    ref = _apply_ops(cache, ops)
+    assert len(cache) == len(ref) <= capacity
+    for key, want in ref.items():
+        assert key in cache
+    # eviction accounting: puts that displaced something, exactly
+    s = cache.stats()
+    total_puts = sum(1 for _, p, _ in ops if p)
+    assert s.size + s.evictions <= total_puts or total_puts == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=9), min_size=1,
+                max_size=40),
+       st.integers(min_value=1, max_value=6),
+       st.integers(min_value=0, max_value=39))
+def test_cache_property_snapshot_restore_equivalent(keys, capacity, cut):
+    """Snapshotting at ANY point and restoring into a fresh cache yields a
+    cache whose future behavior (contents + LRU eviction order) is
+    indistinguishable from the original."""
+    import tempfile
+
+    cut = min(cut, len(keys))
+    a = PredictionCache(capacity)
+    for i, k in enumerate(keys[:cut]):
+        a.put(f"k{k}", float(i))
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "snap.npz")
+        n = a.snapshot(path)
+        b = PredictionCache(capacity)
+        assert b.restore(path) == n == len(a)
+    # replay the remaining ops on both; they must stay in lockstep,
+    # including which keys get evicted
+    for i, k in enumerate(keys[cut:]):
+        key = f"k{k}"
+        assert a.get(key) == b.get(key)
+        a.put(key, float(i) + 0.5)
+        b.put(key, float(i) + 0.5)
+    sa, sb = a.stats(), b.stats()
+    assert sa.size == sb.size
+    for k in set(f"k{k}" for k in keys):
+        assert (k in a) == (k in b)
+
+
+# ---------------------------------------------------------------------------
+# Regression: multi-thread coalescer never double-flushes or loses tickets
+# ---------------------------------------------------------------------------
+def test_coalescer_concurrent_adds_and_flushes_lose_nothing():
+    """8 threads add overlapping keys while flushing aggressively; every
+    ticket must resolve exactly once, and the flush accounting must add up:
+    unique keys scored == sum(flush_sizes), duplicates == coalesced."""
+    import threading
+
+    score_calls = []
+    lock = threading.Lock()
+
+    def score(graphs):
+        with lock:
+            score_calls.append(len(graphs))
+        return np.array([g.num_nodes for g in graphs], np.float32)
+
+    co = RequestCoalescer(score, node_budget=1 << 30)
+    graphs = [random_kernel(n, seed=n) for n in range(5, 13)]
+    tickets = []
+    tlock = threading.Lock()
+    start = threading.Barrier(8)
+
+    def worker(t):
+        start.wait()
+        mine = []
+        for i in range(50):
+            g = graphs[(t + i) % len(graphs)]
+            mine.append((g.num_nodes, co.add(g.canonical_hash(), g)))
+            if i % 7 == 0:
+                co.flush()
+        co.flush()
+        with tlock:
+            tickets.extend(mine)
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not any(t.is_alive() for t in threads)
+    co.flush()
+    # no lost tickets: every add resolved, with the right score
+    assert len(tickets) == 8 * 50
+    assert all(tk.ready and tk.value == float(n) for n, tk in tickets)
+    # no double-flush: each unique pending graph was scored exactly once
+    # per residence in the pending set, so scored + coalesced == adds
+    assert sum(co.flush_sizes) + co.coalesced == 8 * 50
+    assert sum(score_calls) == sum(co.flush_sizes)
+    assert co.pending == 0
+
+
+def test_coalescer_backend_failure_leaves_clean_state():
+    """A raising backend must not wedge the coalescer: pending empties,
+    later adds start a fresh batch that scores normally."""
+    boom = {"on": True}
+
+    def score(graphs):
+        if boom["on"]:
+            raise RuntimeError("injected")
+        return np.array([g.num_nodes for g in graphs], np.float32)
+
+    co = RequestCoalescer(score, node_budget=1 << 30)
+    g = random_kernel(6, seed=0)
+    t1 = co.add(g.canonical_hash(), g)
+    with pytest.raises(RuntimeError):
+        co.flush()
+    assert co.pending == 0 and not t1.ready     # clean failure, no limbo
+    boom["on"] = False
+    t2 = co.add(g.canonical_hash(), g)
+    co.flush()
+    assert t2.ready and t2.value == 6.0
+    assert t2 is not t1                          # fresh batch, fresh ticket

@@ -1,6 +1,8 @@
 """End-to-end behaviour tests for the paper's system: corpus → datasets →
 train both task models → they beat chance and track the oracle → they drive
 the autotuner. This is the whole Figure-1 loop at CI scale."""
+import os
+
 import numpy as np
 import pytest
 
@@ -141,3 +143,33 @@ def test_arch_import_joins_corpus(world):
     scorer = analytical_tile_scorer(AnalyticalModel())
     res = eval_tile_task(tds, scorer)
     assert np.isfinite(res["mean_ape"])
+
+
+# ---------------------------------------------------------------------------
+# Benchmark-gate calibration (benchmarks must gate bindingly at any scale)
+# ---------------------------------------------------------------------------
+def test_bench_serving_scale_aware_gate():
+    """bench_serving used to print a warning at BENCH_SCALE<1 and still
+    gate at the full-scale 2x — a silent trap where scaled CI runs fail on
+    an unreachable threshold (or, gated off, pass vacuously). The
+    calibrated threshold must be monotone in scale, exactly the 2x
+    contract at full scale, floored so the service always has to beat
+    direct scoring, and binding at the documented 0.5-scale margin."""
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "bench_serving", os.path.join(os.path.dirname(__file__), "..",
+                                      "benchmarks", "bench_serving.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    thr = mod.service_speedup_threshold
+    # full-scale contract unchanged
+    assert thr(1.0) == 2.0 and thr(4.0) == 2.0
+    # floor: never degrades into "any speedup passes"
+    assert thr(0.0) == 1.25 and thr(0.1) == pytest.approx(1.25)
+    # monotone non-decreasing in scale
+    grid = [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 1.0, 2.0]
+    vals = [thr(s) for s in grid]
+    assert all(a <= b for a, b in zip(vals, vals[1:]))
+    # binding at the measured 0.5-scale margin (~2.07x): the threshold
+    # sits below the measurement but close enough to catch regressions
+    assert 1.25 <= thr(0.5) == 1.5 < 2.07
