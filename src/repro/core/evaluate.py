@@ -34,12 +34,18 @@ def predict_kernels(params, model_cfg: CostModelConfig, graphs, normalizer,
                     node_budget: int | None = None) -> np.ndarray:
     """Predict scores for a list of KernelGraphs (batched inference).
 
-    dense  — fixed-size chunks padded to `chunk` graphs × `max_nodes` nodes,
-             so every call hits one compiled shape.
-    sparse — kernels packed into flat buffers of ≤ `node_budget` total nodes
-             (default 8 × max_nodes) with pow2-bucketed capacities, so an
-             arbitrary corpus runs through a handful of compiled shapes and
-             small kernels never pay big kernels' padding.
+    dense     — fixed-size chunks padded to `chunk` graphs × `max_nodes`
+                nodes, so every call hits one compiled shape.
+    sparse    — kernels packed into flat buffers of ≤ `node_budget` total
+                nodes (default 8 × max_nodes) with pow2-bucketed
+                capacities, so an arbitrary corpus runs through a handful
+                of compiled shapes and small kernels never pay big
+                kernels' padding. Kernels beyond the budget still score
+                (oversized singleton packs).
+    segmented — whole-program graphs of any size: each graph segmented
+                into ≤ `node_budget` blocks (default 8 × max_nodes) and
+                reassembled before readout (DESIGN.md §12); chunks of
+                `chunk` graphs per device batch.
 
     `adjacency` defaults to `model_cfg.adjacency`.
 
@@ -65,6 +71,16 @@ def predict_kernels(params, model_cfg: CostModelConfig, graphs, normalizer,
             preds = np.asarray(predict(params, enc))
             out[idx] = preds[:len(idx)]
         return out
+    if adjacency == "segmented":
+        from repro.data.batching import encode_segmented
+        budget = node_budget or 8 * max_nodes
+        out = []
+        for i in range(0, len(graphs), chunk):
+            part = graphs[i:i + chunk]
+            enc = encode_segmented(part, budget, normalizer)
+            preds = np.asarray(predict(params, enc))
+            out.append(preds[:len(part)])
+        return np.concatenate(out) if out else np.zeros((0,), np.float32)
     out = []
     for i in range(0, len(graphs), chunk):
         part = graphs[i:i + chunk]

@@ -473,6 +473,8 @@ def register_pytrees() -> None:
                              _graphbatch_unflatten)
     jtu.register_pytree_node(SparseGraphBatch, _sparsebatch_flatten,
                              _sparsebatch_unflatten)
+    jtu.register_pytree_node(SegmentedGraphBatch, _segmentedbatch_flatten,
+                             _segmentedbatch_unflatten)
     _PYTREES_REGISTERED = True
 
 
@@ -567,6 +569,53 @@ def _sparsebatch_flatten(b: SparseGraphBatch):
 
 def _sparsebatch_unflatten(_, children):
     return SparseGraphBatch(*children)
+
+
+@dataclass
+class SegmentedGraphBatch:
+    """A batch of whole-program graphs too big for one bucket
+    (`repro.data.segmentation`; DESIGN.md §12).
+
+    `inner` is an ordinary `SparseGraphBatch` whose graph slots are the
+    *segments* of every member graph (owned nodes plus halo copies), so
+    message passing reuses the bucketed sparse path unchanged. After the
+    GNN, `scatter_idx` reassembles owned-node embeddings into whole-graph
+    node order — halo and padding rows scatter to the dummy slot
+    `num_nodes` (one past the outer buffer) and are dropped. The outer
+    arrays mirror `SparseGraphBatch`'s readout fields, one slot per
+    *original* graph: `kernel_feats` / `gather_idx` / masks describe the
+    whole graphs, with the same `gather_idx` sentinel convention
+    (`num_nodes` → appended zero row).
+    """
+    inner: "SparseGraphBatch"
+    scatter_idx: np.ndarray    # [M_inner] int32 — outer slot or num_nodes
+    node_mask: np.ndarray      # [M_outer] float32
+    graph_ids: np.ndarray      # [M_outer] int32
+    kernel_feats: np.ndarray   # [G, F_kernel] float32 (whole graphs)
+    graph_mask: np.ndarray     # [G] float32
+    gather_idx: np.ndarray     # [G, R] int32
+    gather_mask: np.ndarray    # [G, R] float32
+
+    @property
+    def batch_size(self) -> int:       # original-graph slots
+        return self.kernel_feats.shape[0]
+
+    @property
+    def num_nodes(self) -> int:        # outer (reassembled) node capacity
+        return self.node_mask.shape[0]
+
+    @property
+    def reduce_capacity(self) -> int:
+        return self.gather_idx.shape[1]
+
+
+def _segmentedbatch_flatten(b: SegmentedGraphBatch):
+    return ((b.inner, b.scatter_idx, b.node_mask, b.graph_ids,
+             b.kernel_feats, b.graph_mask, b.gather_idx, b.gather_mask), None)
+
+
+def _segmentedbatch_unflatten(_, children):
+    return SegmentedGraphBatch(*children)
 
 
 def encode_sparse_batch(graphs: Sequence[KernelGraph],

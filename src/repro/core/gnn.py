@@ -13,6 +13,19 @@ Two numerically equivalent aggregation backends share one parameter tree:
 * sparse — `jax.ops.segment_sum` over a packed edge list
   (`*_apply_sparse`), linear in edge count instead of quadratic in the
   padded node count; used with `features.SparseGraphBatch` (DESIGN.md §4).
+
+Two numerically equivalent *layer-stack* layouts share the same layer code
+(DESIGN.md §12):
+
+* unrolled — `{"layers": [layer_0, ..., layer_{L-1}]}`, a Python loop;
+  each `jit` trace inlines every layer, so trace/compile cost grows with
+  depth × number of batch shapes.
+* stacked — `{"stacked": tree}` where each leaf carries a leading layer
+  axis `[L, ...]`; every `*_apply` runs the layer body once under
+  `jax.lax.scan`, so trace cost is depth-independent (the scan-over-layers
+  idiom). `stack_params` / `unstack_params` convert between the layouts
+  bit-exactly, and `training.checkpoint.restore_checkpoint` restores
+  either layout from either on-disk layout.
 """
 from __future__ import annotations
 
@@ -24,6 +37,87 @@ from repro.nn.core import (
     dense_init,
     l2_normalize,
 )
+
+
+# ----------------------------------------------------------------------------
+# Layer-stack layout converters + scan-over-layers driver (DESIGN.md §12)
+# ----------------------------------------------------------------------------
+def stack_params(params: dict) -> dict:
+    """Convert an unrolled GNN parameter tree (``{"layers": [...]}``) to the
+    stacked layout (``{"stacked": tree}``, leaves ``[L, ...]``).
+
+    Stacking is exact (`jnp.stack` of the per-layer leaves), so predictions
+    and gradients through the scan path match the unrolled path.
+
+    >>> import jax, numpy as np
+    >>> p = sage_init(jax.random.key(0), 8, 3, directed=True)
+    >>> s = stack_params(p)
+    >>> s["stacked"]["f2_in"]["w"].shape
+    (3, 8, 8)
+    >>> u = unstack_params(s)
+    >>> bool(np.array_equal(u["layers"][1]["f3"]["w"],
+    ...                     p["layers"][1]["f3"]["w"]))
+    True
+    """
+    if "stacked" in params:
+        return params
+    layers = params["layers"]
+    if not layers:
+        raise ValueError("cannot stack an empty layer list")
+    return {"stacked": jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs, axis=0), *layers)}
+
+
+def unstack_params(params: dict) -> dict:
+    """Inverse of `stack_params`: split the leading layer axis back into a
+    per-layer list. Exact (pure slicing)."""
+    if "layers" in params:
+        return params
+    stacked = params["stacked"]
+    num_layers = int(jax.tree_util.tree_leaves(stacked)[0].shape[0])
+    return {"layers": [jax.tree_util.tree_map(lambda x: x[i], stacked)
+                       for i in range(num_layers)]}
+
+
+def num_layers(params: dict) -> int:
+    """Depth of a GNN parameter tree in either layout."""
+    if "stacked" in params:
+        return int(jax.tree_util.tree_leaves(params["stacked"])[0].shape[0])
+    return len(params["layers"])
+
+
+def _apply_stack(params: dict, eps: jnp.ndarray, layer_fn) -> jnp.ndarray:
+    """Run `layer_fn(layer_params, h) -> h` over every layer of `params`.
+
+    Stacked layout → one `lax.scan` (the layer body traces once per
+    enclosing jit trace, regardless of depth); unrolled layout → a Python
+    loop (the body traces once per layer).
+    """
+    if "stacked" in params:
+        def body(h, layer):
+            return layer_fn(layer, h), None
+        eps, _ = jax.lax.scan(body, eps, params["stacked"])
+        return eps
+    for layer in params["layers"]:
+        eps = layer_fn(layer, eps)
+    return eps
+
+
+# Layer-body trace counters (benchmarks/bench_giant_graphs.py): every call
+# of a `*_layer_apply*` body bumps one of these. Under jit that happens at
+# *trace* time only, so the counters measure exactly the trace/compile
+# blowup the scan path removes: unrolled traces the body depth× per batch
+# shape, stacked traces it once per shape.
+_TRACE_COUNTS = {"dense": 0, "sparse": 0}
+
+
+def reset_layer_trace_counts() -> None:
+    _TRACE_COUNTS["dense"] = 0
+    _TRACE_COUNTS["sparse"] = 0
+
+
+def layer_trace_counts() -> dict:
+    return dict(_TRACE_COUNTS)
 
 
 # ----------------------------------------------------------------------------
@@ -65,6 +159,7 @@ def sage_layer_apply(params: dict, eps: jnp.ndarray, adj: jnp.ndarray,
     repro.kernels.graph_aggregate kernel (beyond-paper optimization —
     interpret-mode on CPU, real VMEM fusion on TPU).
     """
+    _TRACE_COUNTS["dense"] += 1
     if use_pallas:
         from repro.kernels.graph_aggregate.ops import graph_aggregate
         import jax as _jax
@@ -118,11 +213,11 @@ def sage_init(rng, dim: int, num_layers: int, *, directed: bool = True,
 def sage_apply(params: dict, eps: jnp.ndarray, adj: jnp.ndarray,
                node_mask: jnp.ndarray, *, aggregator: str = "mean",
                directed: bool = True, use_pallas: bool = False) -> jnp.ndarray:
-    for layer in params["layers"]:
-        eps = sage_layer_apply(layer, eps, adj, node_mask,
-                               aggregator=aggregator, directed=directed,
-                               use_pallas=use_pallas)
-    return eps
+    def layer_fn(layer, h):
+        return sage_layer_apply(layer, h, adj, node_mask,
+                                aggregator=aggregator, directed=directed,
+                                use_pallas=use_pallas)
+    return _apply_stack(params, eps, layer_fn)
 
 
 # ----------------------------------------------------------------------------
@@ -159,6 +254,7 @@ def sage_layer_apply_sparse(params: dict, eps: jnp.ndarray,
     Takes the same parameter tree; numerically equivalent to the dense path
     on the same graphs (tests/test_sparse_batching.py pins this).
     """
+    _TRACE_COUNTS["sparse"] += 1
     msg_in = jax.nn.relu(dense_apply(params["f2_in"], eps))
     agg_in = _segment_aggregate(msg_in, edge_src, edge_dst, edge_mask,
                                 node_mask, aggregator)
@@ -181,12 +277,12 @@ def sage_apply_sparse(params: dict, eps: jnp.ndarray, edge_src: jnp.ndarray,
                       edge_dst: jnp.ndarray, edge_mask: jnp.ndarray,
                       node_mask: jnp.ndarray, *, aggregator: str = "mean",
                       directed: bool = True) -> jnp.ndarray:
-    for layer in params["layers"]:
-        eps = sage_layer_apply_sparse(layer, eps, edge_src, edge_dst,
-                                      edge_mask, node_mask,
-                                      aggregator=aggregator,
-                                      directed=directed)
-    return eps
+    def layer_fn(layer, h):
+        return sage_layer_apply_sparse(layer, h, edge_src, edge_dst,
+                                       edge_mask, node_mask,
+                                       aggregator=aggregator,
+                                       directed=directed)
+    return _apply_stack(params, eps, layer_fn)
 
 
 # ----------------------------------------------------------------------------
@@ -238,6 +334,7 @@ def _gat_attend(h: jnp.ndarray, adj: jnp.ndarray, a_src: jnp.ndarray,
 def gat_layer_apply(params: dict, eps: jnp.ndarray, adj: jnp.ndarray,
                     node_mask: jnp.ndarray, *, num_heads: int,
                     directed: bool = True) -> jnp.ndarray:
+    _TRACE_COUNTS["dense"] += 1
     h_in = dense_apply(params["w_in"], eps)
     agg_in = _gat_attend(h_in, adj, params["a_src_in"], params["a_dst_in"],
                          num_heads)
@@ -267,10 +364,10 @@ def gat_init(rng, dim: int, num_layers: int, num_heads: int, *,
 def gat_apply(params: dict, eps: jnp.ndarray, adj: jnp.ndarray,
               node_mask: jnp.ndarray, *, num_heads: int,
               directed: bool = True) -> jnp.ndarray:
-    for layer in params["layers"]:
-        eps = gat_layer_apply(layer, eps, adj, node_mask, num_heads=num_heads,
-                              directed=directed)
-    return eps
+    def layer_fn(layer, h):
+        return gat_layer_apply(layer, h, adj, node_mask, num_heads=num_heads,
+                               directed=directed)
+    return _apply_stack(params, eps, layer_fn)
 
 
 def _gat_attend_sparse(h: jnp.ndarray, edge_src: jnp.ndarray,
@@ -312,6 +409,7 @@ def gat_layer_apply_sparse(params: dict, eps: jnp.ndarray,
         raise NotImplementedError(
             "undirected GAT is dense-only; use adjacency='dense' "
             "(see DESIGN.md §4)")
+    _TRACE_COUNTS["sparse"] += 1
     h_in = dense_apply(params["w_in"], eps)
     agg_in = _gat_attend_sparse(h_in, edge_src, edge_dst, edge_mask,
                                 params["a_src_in"], params["a_dst_in"],
@@ -330,8 +428,8 @@ def gat_apply_sparse(params: dict, eps: jnp.ndarray, edge_src: jnp.ndarray,
                      edge_dst: jnp.ndarray, edge_mask: jnp.ndarray,
                      node_mask: jnp.ndarray, *, num_heads: int,
                      directed: bool = True) -> jnp.ndarray:
-    for layer in params["layers"]:
-        eps = gat_layer_apply_sparse(layer, eps, edge_src, edge_dst,
-                                     edge_mask, node_mask,
-                                     num_heads=num_heads, directed=directed)
-    return eps
+    def layer_fn(layer, h):
+        return gat_layer_apply_sparse(layer, h, edge_src, edge_dst,
+                                      edge_mask, node_mask,
+                                      num_heads=num_heads, directed=directed)
+    return _apply_stack(params, eps, layer_fn)

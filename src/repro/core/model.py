@@ -61,7 +61,13 @@ class CostModelConfig:
     # 'sparse' (packed SparseGraphBatch + segment_sum). `cost_model_apply`
     # itself dispatches on the batch type; samplers/evaluators/autotuners
     # read this field to pick the encoder. See DESIGN.md §4.
-    adjacency: str = "dense"             # dense | sparse
+    adjacency: str = "dense"             # dense | sparse | segmented
+    # Store GNN layer params stacked ([L, ...] leaves) and run message
+    # passing as one `lax.scan` over the layer axis: the layer body traces
+    # once per bucket shape instead of `gnn_layers` times, so compile cost
+    # is depth-independent (DESIGN.md §12). Either layout of an on-disk
+    # checkpoint restores into either setting (training/checkpoint.py).
+    scan_layers: bool = False
 
     def to_dict(self) -> dict:
         return asdict(self)
@@ -97,6 +103,8 @@ def cost_model_init(rng, cfg: CostModelConfig, dtype=jnp.float32) -> dict:
                                    dtype=dtype)
     elif cfg.gnn != "none":
         raise ValueError(f"unknown gnn {cfg.gnn!r}")
+    if cfg.scan_layers and "gnn" in params and params["gnn"]["layers"]:
+        params["gnn"] = G.stack_params(params["gnn"])
 
     if cfg.reduction == "per_node":
         params["node_head"] = dense_init(keys[5], d, 1, bias=False, dtype=dtype)
@@ -116,6 +124,9 @@ def cost_model_apply(params: dict, cfg: CostModelConfig, batch,
     """batch: features.GraphBatch or features.SparseGraphBatch (pytrees).
     Returns predictions [B] (one per graph slot). Both representations share
     one parameter tree and agree numerically (DESIGN.md §4)."""
+    if isinstance(batch, F.SegmentedGraphBatch):
+        return _cost_model_apply_segmented(params, cfg, batch, rng=rng,
+                                           deterministic=deterministic)
     if isinstance(batch, F.SparseGraphBatch):
         return _cost_model_apply_sparse(params, cfg, batch, rng=rng,
                                         deterministic=deterministic)
@@ -168,26 +179,26 @@ def cost_model_apply(params: dict, cfg: CostModelConfig, batch,
     return dense_apply(params["head"], kappa)[..., 0]
 
 
-def _cost_model_apply_sparse(params: dict, cfg: CostModelConfig, batch,
-                             *, rng=None,
-                             deterministic: bool = True) -> jnp.ndarray:
-    """Sparse/packed forward pass: flat [M, ·] node buffer, segment_sum
-    aggregation, per-graph readout via segment ids (or a gather into a
-    [G, R, D] layout for the sequence reductions)."""
-    mask = batch.node_mask                       # [M]
-    gids = batch.graph_ids                       # [M]
-    kfeats = batch.kernel_feats                  # [G, F_kernel]
-    num_graphs = kfeats.shape[0]
-
+def _mask_kernel_feats(cfg: CostModelConfig, kfeats: jnp.ndarray):
     if not cfg.include_tile:
         kfeats = kfeats.at[:, F.TILE_SLICE].set(0.0)
     if not cfg.include_static_perf:
         kfeats = kfeats.at[:, F.STATIC_PERF_SLICE].set(0.0)
+    return kfeats
+
+
+def _embed_sparse(params: dict, cfg: CostModelConfig, batch) -> jnp.ndarray:
+    """Embed + f1 + GNN over a flat sparse node buffer: the per-node half
+    of the sparse forward pass, shared by the plain sparse path and the
+    segmented path (which runs it on segment blocks before reassembly)."""
+    mask = batch.node_mask                       # [M]
+    kfeats = _mask_kernel_feats(cfg, batch.kernel_feats)
 
     emb = embedding_apply(params["opcode_embed"], batch.opcodes)  # [M, E]
     x = jnp.concatenate([emb, batch.node_feats], axis=-1)
     if cfg.kernel_feat_mode == "node":
-        x = jnp.concatenate([x, jnp.take(kfeats, gids, axis=0)], axis=-1)
+        x = jnp.concatenate(
+            [x, jnp.take(kfeats, batch.graph_ids, axis=0)], axis=-1)
 
     eps = jax.nn.relu(dense_apply(params["f1"], x)) * mask[:, None]
 
@@ -205,6 +216,51 @@ def _cost_model_apply_sparse(params: dict, cfg: CostModelConfig, batch,
                                      batch.edge_dst, batch.edge_mask, mask,
                                      num_heads=cfg.gat_heads,
                                      directed=cfg.directed)
+    return eps
+
+
+def _cost_model_apply_sparse(params: dict, cfg: CostModelConfig, batch,
+                             *, rng=None,
+                             deterministic: bool = True) -> jnp.ndarray:
+    """Sparse/packed forward pass: flat [M, ·] node buffer, segment_sum
+    aggregation, per-graph readout via segment ids (or a gather into a
+    [G, R, D] layout for the sequence reductions)."""
+    eps = _embed_sparse(params, cfg, batch)
+    return _readout_sparse(params, cfg, eps, batch.node_mask,
+                           batch.graph_ids, batch.kernel_feats,
+                           batch.gather_idx, batch.gather_mask,
+                           rng=rng, deterministic=deterministic)
+
+
+def _cost_model_apply_segmented(params: dict, cfg: CostModelConfig, batch,
+                                *, rng=None,
+                                deterministic: bool = True) -> jnp.ndarray:
+    """Whole-program forward pass (DESIGN.md §12): run the per-node half on
+    the inner segment batch, scatter owned-node embeddings back into
+    whole-graph node order, then read out per original graph. Graphs that
+    fit one segment go through bit-identically to the sparse path."""
+    eps_in = _embed_sparse(params, cfg, batch.inner)       # [M_inner, D]
+    M = batch.num_nodes
+    # halo + padding rows target the dummy slot M and are dropped; owned
+    # slots are written exactly once (owned sets partition the graph)
+    buf = jnp.zeros((M + 1, eps_in.shape[-1]), eps_in.dtype)
+    eps = buf.at[batch.scatter_idx].set(eps_in)[:M]
+    return _readout_sparse(params, cfg, eps, batch.node_mask,
+                           batch.graph_ids, batch.kernel_feats,
+                           batch.gather_idx, batch.gather_mask,
+                           rng=rng, deterministic=deterministic)
+
+
+def _readout_sparse(params: dict, cfg: CostModelConfig, eps: jnp.ndarray,
+                    mask: jnp.ndarray, gids: jnp.ndarray,
+                    kfeats: jnp.ndarray, gather_idx: jnp.ndarray,
+                    gather_mask: jnp.ndarray, *, rng=None,
+                    deterministic: bool = True) -> jnp.ndarray:
+    """node-final MLP + reduction + head over a flat [M, D] embedding
+    buffer with per-node graph ids — the per-graph half of the sparse
+    forward pass (also the segmented path's outer readout)."""
+    num_graphs = kfeats.shape[0]
+    kfeats = _mask_kernel_feats(cfg, kfeats)
 
     sub = None if rng is None else jax.random.fold_in(rng, 1)
     eps = dropout(sub, eps, cfg.dropout, deterministic)
@@ -236,9 +292,9 @@ def _cost_model_apply_sparse(params: dict, cfg: CostModelConfig, batch,
         # typically ≪ the dense path's max_nodes × slot padding)
         eps_pad = jnp.concatenate(
             [eps, jnp.zeros((1, eps.shape[-1]), eps.dtype)], axis=0)
-        seq = jnp.take(eps_pad, batch.gather_idx, axis=0)          # [G, R, D]
+        seq = jnp.take(eps_pad, gather_idx, axis=0)                # [G, R, D]
         kappa = R.reduction_apply(params["reduction"], cfg.reduction, seq,
-                                  batch.gather_mask,
+                                  gather_mask,
                                   transformer_heads=cfg.transformer_heads,
                                   rng=rng, dropout_rate=cfg.dropout,
                                   deterministic=deterministic)

@@ -65,11 +65,15 @@ def _program_index(records) -> dict[str, list[int]]:
 def _encode(graphs, adjacency: str, max_nodes: int, normalizer):
     """Encode a drawn graph list with the configured representation.
 
-    dense  — `features.encode_batch`, one padded [N, N] slot per graph.
-    sparse — `batching.encode_packed`, the whole draw packed into one flat
-             node/edge buffer with pow2-bucketed capacities, so only a few
-             shapes reach jit (slot order == draw order, so targets/groups
-             line up unchanged).
+    dense     — `features.encode_batch`, one padded [N, N] slot per graph.
+    sparse    — `batching.encode_packed`, the whole draw packed into one
+                flat node/edge buffer with pow2-bucketed capacities, so
+                only a few shapes reach jit (slot order == draw order, so
+                targets/groups line up unchanged).
+    segmented — `batching.encode_segmented`, for whole-program graphs of
+                any size: each graph split into ≤ max_nodes segments,
+                owned-node embeddings reassembled before readout
+                (DESIGN.md §12). Slot order == draw order here too.
     """
     if adjacency == "dense":
         return encode_batch(graphs, max_nodes, normalizer)
@@ -81,6 +85,8 @@ def _encode(graphs, adjacency: str, max_nodes: int, normalizer):
         spec = dataclasses.replace(batching.bucket_for(graphs),
                                    graph_capacity=len(graphs))
         return batching.encode_packed(graphs, normalizer, spec=spec)
+    if adjacency == "segmented":
+        return batching.encode_segmented(graphs, max_nodes, normalizer)
     raise ValueError(f"unknown adjacency {adjacency!r}")
 
 

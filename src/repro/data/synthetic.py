@@ -335,6 +335,95 @@ def generate_corpus(num_programs: int = 104, seed: int = 0) -> list[KernelGraph]
             for fam, idx in corpus_plan(num_programs)]
 
 
+def whole_model_graph(target_nodes: int, seed: int = 0, *,
+                      arch_blocks: tuple = (),
+                      name: str | None = None) -> KernelGraph:
+    """A whole-program graph (TpuGraphs-scale; DESIGN.md §12): many model
+    blocks stitched end-to-end until the graph reaches `target_nodes`.
+
+    Blocks come from `arch_blocks` (names for
+    `repro.core.hlo_import.import_arch_program`, cycled; silently skipped
+    when an arch can't be imported) interleaved with the synthetic family
+    generators. Consecutive blocks are bridged the way real programs chain
+    layers: the previous block's root output is reduced to a scalar
+    (`REDUCE_SUM` → shape ``(1,)``) and the next block's first `PARAMETER`
+    is replaced by a `BROADCAST` of that scalar to the parameter's shape —
+    one connected dataflow graph, still topologically ordered.
+
+    Deterministic in (target_nodes, seed, arch_blocks). The result exceeds
+    `target_nodes` by at most one block.
+
+    >>> g = whole_model_graph(500, seed=0)
+    >>> g.num_nodes >= 500
+    True
+    >>> max(abs(d - s) for s, d in g.unique_edges()) > 1   # cross-block edges
+    True
+    """
+    rng = np.random.default_rng(np.random.SeedSequence([seed, target_nodes]))
+    label = name or f"wholemodel_{target_nodes}_{seed}"
+    fams = list(FAMILIES)
+    nodes: list[Node] = []
+    prev_out = None          # global index of the previous block's root
+    bi = 0
+    while len(nodes) < target_nodes:
+        block = None
+        if arch_blocks:
+            arch = arch_blocks[bi % len(arch_blocks)]
+            try:
+                from repro.core.hlo_import import import_arch_program
+                block = import_arch_program(arch)
+            except Exception:
+                block = None
+        if block is None:
+            fam = fams[int(rng.integers(len(fams)))]
+            block = FAMILIES[fam](rng, f"{label}_blk{bi}")
+        off = len(nodes)
+        if prev_out is not None:
+            # bridge: scalar summary of the previous block's output
+            prev = nodes[prev_out]
+            nodes.append(Node(opset.REDUCE_SUM, (1,), prev.dtype_bytes,
+                              (prev_out,), reduced_dims=prev.shape))
+            off += 1
+        bridged = prev_out is None      # first block keeps all its params
+        for i, n in enumerate(block.nodes):
+            if not bridged and n.op is opset.PARAMETER:
+                nodes.append(Node(opset.BROADCAST, n.shape, n.dtype_bytes,
+                                  (off - 1,)))
+                bridged = True
+                continue
+            nodes.append(Node(n.op, n.shape, n.dtype_bytes,
+                              tuple(j + off for j in n.inputs), False,
+                              n.contract_dim, n.filter_size, n.reduced_dims))
+        # root of this block = its last non-parameter node
+        for j in range(len(nodes) - 1, -1, -1):
+            if nodes[j].op is not opset.PARAMETER:
+                prev_out = j
+                break
+        bi += 1
+    b = _Builder(label)
+    b.nodes = nodes
+    return b.build()
+
+
+def whole_model_records(num_programs: int, target_nodes: int, seed: int = 0,
+                        *, arch_blocks: tuple = (), simulator=None) -> list:
+    """`FusionKernelRecord`s for whole-model graphs, runtime-labeled by the
+    simulator — the training/serving payload for the giant-graph path
+    (`benchmarks/bench_giant_graphs.py` streams these through the corpus
+    store and the segmented sampler)."""
+    from repro.core.simulator import TPUSimulator
+    from repro.data.fusion_dataset import FusionKernelRecord
+
+    sim = simulator or TPUSimulator()
+    out = []
+    for i in range(num_programs):
+        g = whole_model_graph(target_nodes, seed + i,
+                              arch_blocks=arch_blocks)
+        out.append(FusionKernelRecord(kernel=g, runtime=sim.measure(g),
+                                      program=g.program))
+    return out
+
+
 def random_kernel(num_nodes: int, seed: int = 0, *,
                   program: str = "random") -> KernelGraph:
     """A random topologically ordered DAG kernel of exactly `num_nodes`

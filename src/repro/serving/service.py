@@ -144,7 +144,7 @@ class CostModelService:
         self.model_cfg = model_cfg
         self.normalizer = normalizer
         self.adjacency = adjacency or model_cfg.adjacency
-        if self.adjacency not in ("dense", "sparse"):
+        if self.adjacency not in ("dense", "sparse", "segmented"):
             raise ValueError(f"unknown adjacency {self.adjacency!r}")
         self.max_nodes = max_nodes or model_cfg.max_nodes
         self.node_budget = node_budget or 8 * self.max_nodes
@@ -155,8 +155,9 @@ class CostModelService:
         # reordered graphs may score differently — key the cache on order
         self._order_sensitive = model_cfg.reduction == "lstm"
         self.cache = PredictionCache(cache_capacity)
-        score = self._score_sparse if self.adjacency == "sparse" \
-            else self._score_dense
+        score = {"sparse": self._score_sparse,
+                 "segmented": self._score_segmented,
+                 "dense": self._score_dense}[self.adjacency]
         self.coalescer = RequestCoalescer(score,
                                           node_budget=self.node_budget,
                                           on_scored=self.cache.put)
@@ -175,7 +176,11 @@ class CostModelService:
     # costs a tile-slice rewrite, not a full structural re-encode.
     def _score_sparse(self, graphs: Sequence[KernelGraph]) -> np.ndarray:
         out = np.zeros((len(graphs),), np.float32)
-        for pack in pack_graphs(graphs, self.node_budget):
+        # inference scores whatever it is handed: kernels beyond the budget
+        # keep their historical oversized singleton packs here (the
+        # 'segmented' backend routes them through graph segmentation)
+        for pack in pack_graphs(graphs, self.node_budget,
+                                oversized="singleton"):
             part = [graphs[i] for i in pack]
             spec = bucket_for(part)
             enc = encode_packed(
@@ -187,6 +192,32 @@ class CostModelService:
             use[0] += 1
             use[1] += len(pack)
             use[2] += sum(g.num_nodes for g in part) / spec.node_capacity
+        return out
+
+    def _score_segmented(self, graphs: Sequence[KernelGraph]) -> np.ndarray:
+        """Whole-program miss path (DESIGN.md §12): graphs within the node
+        budget ride the ordinary sparse bucket ladder; bigger ones are
+        segmented into ≤ node_budget blocks and reassembled before readout,
+        one giant graph per device batch."""
+        from repro.data.batching import encode_segmented
+        out = np.zeros((len(graphs),), np.float32)
+        small = [i for i, g in enumerate(graphs)
+                 if g.num_nodes <= self.node_budget]
+        if small:
+            out[np.asarray(small)] = self._score_sparse(
+                [graphs[i] for i in small])
+        for i in range(len(graphs)):
+            g = graphs[i]
+            if g.num_nodes <= self.node_budget:
+                continue
+            enc = encode_segmented(
+                [g], self.node_budget, self.normalizer,
+                include_static_perf=self.include_static_perf)
+            out[i] = float(np.asarray(self._predict(self.params, enc))[0])
+            use = self._bucket_use.setdefault("segmented", [0, 0, 0.0])
+            use[0] += 1
+            use[1] += 1
+            use[2] += g.num_nodes / enc.num_nodes
         return out
 
     def _score_dense(self, graphs: Sequence[KernelGraph]) -> np.ndarray:

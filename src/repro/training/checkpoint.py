@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 
 import jax
@@ -22,6 +23,41 @@ import numpy as np
 
 _MANIFEST = "manifest.json"
 _PREFIX = "step_"
+
+_LAYER_RE = re.compile(r"/layers/(\d+)/")
+
+
+def _resolve_leaf(key: str, want_shape: tuple, by_key: dict, path: str):
+    """Load the checkpoint leaf for template key `key`, converting between
+    the unrolled (`.../layers/<i>/...`) and stacked (`.../stacked/...`) GNN
+    layouts when the on-disk layout differs from the template's
+    (core/gnn.py `stack_params`; DESIGN.md §12). Bit-exact both ways:
+    stacking is `np.stack` of the per-layer arrays, unstacking is a slice.
+
+    Returns the numpy array, or None if the key can't be resolved.
+    """
+    if key in by_key:
+        return np.load(os.path.join(path, by_key[key]["file"]))
+    if "/stacked/" in key and len(want_shape) >= 1:
+        # template wants stacked [L, ...]; try per-layer on-disk leaves
+        num = want_shape[0]
+        parts = []
+        for i in range(num):
+            k = key.replace("/stacked/", f"/layers/{i}/")
+            if k not in by_key:
+                return None
+            parts.append(np.load(os.path.join(path, by_key[k]["file"])))
+        return np.stack(parts, axis=0)
+    m = _LAYER_RE.search(key)
+    if m is not None:
+        # template wants layer i unrolled; try the stacked on-disk leaf
+        k = key[:m.start()] + "/stacked/" + key[m.end():]
+        if k in by_key:
+            stacked = np.load(os.path.join(path, by_key[k]["file"]))
+            i = int(m.group(1))
+            if i < stacked.shape[0]:
+                return stacked[i]
+    return None
 
 
 def _leaf_paths(tree):
@@ -107,10 +143,10 @@ def restore_checkpoint(ckpt_dir: str, like, *, step: int | None = None,
     if len(shard_leaves) != len(leaves):
         raise ValueError("shardings tree does not match state tree")
     for key, leaf, shd in zip(keys, leaves, shard_leaves):
-        if key not in by_key:
-            raise KeyError(f"checkpoint missing leaf {key!r}")
-        arr = np.load(os.path.join(path, by_key[key]["file"]))
         want_shape = tuple(np.shape(leaf))
+        arr = _resolve_leaf(key, want_shape, by_key, path)
+        if arr is None:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
         if tuple(arr.shape) != want_shape:
             raise ValueError(
                 f"leaf {key!r}: checkpoint shape {arr.shape} != {want_shape}")

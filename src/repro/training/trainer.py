@@ -90,7 +90,7 @@ class CostModelTrainer:
 
         # reject dense-only config combos here rather than as a
         # NotImplementedError buried in the first step's jit trace
-        if model_cfg.adjacency == "sparse":
+        if model_cfg.adjacency in ("sparse", "segmented"):
             if cfg.compress_grads:
                 raise ValueError(
                     "compress_grads shards batches on a leading batch dim; "

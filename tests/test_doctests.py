@@ -16,8 +16,10 @@ import pytest
 CURATED_MODULES = [
     "repro.core.graph",
     "repro.core.features",
+    "repro.core.gnn",
     "repro.data.batching",
     "repro.data.fusion",
+    "repro.data.segmentation",
     "repro.data.prefetch",
     "repro.data.store",
     "repro.autotuner.tile_autotuner",

@@ -116,3 +116,115 @@ def test_pallas_aggregate_path_matches_reference():
     p_ref = np.asarray(cost_model_apply(params, cfg_ref, b))
     p_pal = np.asarray(cost_model_apply(params, cfg_pal, b))
     np.testing.assert_allclose(p_ref, p_pal, rtol=2e-5, atol=2e-5)
+
+
+# ----------------------------------------------------------------------------
+# scan-over-layers (stacked) layout ≡ unrolled layout (DESIGN.md §12)
+# ----------------------------------------------------------------------------
+def _scan_graphs():
+    from repro.data.synthetic import random_kernel
+    return [random_kernel(n, seed=n) for n in (12, 7, 18)]
+
+
+@pytest.mark.parametrize("gnn", ["graphsage", "gat"])
+@pytest.mark.parametrize("adjacency", ["dense", "sparse"])
+@pytest.mark.parametrize("depth", [1, 3, 6])
+def test_scan_matches_unrolled(gnn, adjacency, depth):
+    """Stacked-scan apply == unrolled apply on identical params (via
+    stack_params), for both GNNs, both batch layouts, several depths."""
+    from repro.core import gnn as G
+    from repro.data import batching
+    graphs = _scan_graphs()
+    norm = F.fit_normalizer(graphs)
+    cfg = _cfg(gnn=gnn, gnn_layers=depth, reduction="column_wise",
+               max_nodes=24, adjacency=adjacency)
+    params = cost_model_init(jax.random.key(5), cfg)
+    assert "layers" in params["gnn"]
+    stacked = dict(params, gnn=G.stack_params(params["gnn"]))
+    if adjacency == "dense":
+        b = F.encode_batch(graphs, cfg.max_nodes, norm)
+    else:
+        b = batching.encode_packed(graphs, norm)
+    y_unroll = np.asarray(cost_model_apply(params, cfg, b))[:3]
+    y_scan = np.asarray(cost_model_apply(stacked, cfg, b))[:3]
+    np.testing.assert_allclose(y_scan, y_unroll, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("gnn", ["graphsage", "gat"])
+def test_scan_grads_match_unrolled_through_trainer_loss(gnn):
+    """Gradients through the trainer's fusion loss agree between layouts
+    (the scan layout's grads, unstacked, equal the unrolled grads)."""
+    from repro.core import gnn as G
+    from repro.data import batching
+    from repro.core.losses import log_mse_loss
+    graphs = _scan_graphs()
+    norm = F.fit_normalizer(graphs)
+    cfg = _cfg(gnn=gnn, gnn_layers=3, reduction="column_wise",
+               max_nodes=24, adjacency="sparse")
+    params = cost_model_init(jax.random.key(6), cfg)
+    stacked = dict(params, gnn=G.stack_params(params["gnn"]))
+    b = batching.encode_packed(graphs, norm)
+    targets = jnp.asarray([1e-4, 2e-4, 3e-4, 1.0])[:b.batch_size]
+    valid = jnp.asarray(b.graph_mask)
+
+    def loss(p):
+        preds = cost_model_apply(p, cfg, b, deterministic=True)
+        return log_mse_loss(preds, targets, valid)
+
+    lu, gu = jax.value_and_grad(loss)(params)
+    ls, gs = jax.value_and_grad(loss)(stacked)
+    assert float(lu) == pytest.approx(float(ls), rel=1e-6)
+    gs_unrolled = dict(gs, gnn=G.unstack_params(gs["gnn"]))
+    for (ku, a), (ks, c) in zip(
+            jax.tree_util.tree_flatten_with_path(gu)[0],
+            jax.tree_util.tree_flatten_with_path(gs_unrolled)[0]):
+        assert ku == ks
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=1e-5, atol=1e-6, err_msg=str(ku))
+
+
+def test_stack_unstack_roundtrip_bit_exact():
+    from repro.core import gnn as G
+    p = G.sage_init(jax.random.key(7), 16, 4, directed=True)
+    rt = G.unstack_params(G.stack_params(p))
+    for a, c in zip(jax.tree_util.tree_leaves(p),
+                    jax.tree_util.tree_leaves(rt)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+    # idempotent in both directions
+    s = G.stack_params(p)
+    assert G.stack_params(s) is s
+    assert G.unstack_params(p) is p
+    assert G.num_layers(s) == G.num_layers(p) == 4
+
+
+def test_scan_layers_config_initializes_stacked():
+    from repro.core import gnn as G
+    cfg = _cfg(gnn="graphsage", gnn_layers=3, scan_layers=True)
+    params = cost_model_init(jax.random.key(8), cfg)
+    assert "stacked" in params["gnn"]
+    assert G.num_layers(params["gnn"]) == 3
+    b = F.encode_batch([_diamond()], cfg.max_nodes)
+    y = np.asarray(cost_model_apply(params, cfg, b))
+    assert np.all(np.isfinite(y))
+
+
+def test_scan_traces_layer_body_once():
+    """Under jit, the stacked layout traces the layer body once per batch
+    shape; the unrolled layout traces it depth times."""
+    from repro.core import gnn as G
+    depth = 6
+    p = G.sage_init(jax.random.key(9), 16, depth, directed=True)
+    s = G.stack_params(p)
+    eps = jnp.zeros((2, 8, 16))
+    adj = jnp.zeros((2, 8, 8))
+    mask = jnp.ones((2, 8))
+    f_u = jax.jit(lambda pp: G.sage_apply(pp, eps, adj, mask))
+    f_s = jax.jit(lambda pp: G.sage_apply(pp, eps, adj, mask))
+    G.reset_layer_trace_counts()
+    f_u(p).block_until_ready()
+    unrolled = G.layer_trace_counts()["dense"]
+    G.reset_layer_trace_counts()
+    f_s(s).block_until_ready()
+    scanned = G.layer_trace_counts()["dense"]
+    assert unrolled == depth
+    assert scanned == 1

@@ -164,11 +164,40 @@ def test_pack_graphs_partition_and_budget():
 
 def test_pack_graphs_oversized_singleton():
     graphs = _graphs([100, 4, 4])
-    packs = batching.pack_graphs(graphs, node_budget=16)
+    packs = batching.pack_graphs(graphs, node_budget=16,
+                                 oversized="singleton")
     big = [p for p in packs if 0 in p]
     assert big == [[0]]                              # oversized → own pack
     spec = batching.bucket_for([graphs[0]])
     assert spec.node_capacity == 128                 # ladder absorbs it
+
+
+def test_pack_graphs_oversized_raises_by_default():
+    graphs = _graphs([100, 4, 4])
+    with pytest.raises(ValueError) as exc:
+        batching.pack_graphs(graphs, node_budget=16)
+    msg = str(exc.value)
+    assert "graph 0" in msg                          # names the graph...
+    assert "100 nodes" in msg
+    assert "node_budget=16" in msg                   # ...and the budget
+    assert "segment" in msg                          # points at the fix
+
+
+def test_pack_graphs_exactly_at_budget_not_oversized():
+    graphs = _graphs([16, 4, 4])
+    # a graph exactly at the budget packs normally under BOTH policies
+    for policy in ("error", "singleton"):
+        packs = batching.pack_graphs(graphs, node_budget=16,
+                                     oversized=policy)
+        flat = sorted(i for p in packs for i in p)
+        assert flat == list(range(len(graphs)))
+        for p in packs:
+            assert sum(graphs[i].num_nodes for i in p) <= 16
+
+
+def test_pack_graphs_unknown_policy_rejected():
+    with pytest.raises(ValueError, match="oversized"):
+        batching.pack_graphs(_graphs([4]), node_budget=16, oversized="drop")
 
 
 def test_iter_packed_batches_roundtrip():
