@@ -4,7 +4,8 @@ the assigned architectures, train/val/test splits, checkpointing + resume,
 JSONL metrics, periodic eval — then hand the model to both autotuners.
 
   PYTHONPATH=src python examples/train_cost_model.py [--steps 600]
-      [--adjacency dense|sparse] [--prefetch 2]
+      [--adjacency dense|sparse] [--prefetch 2] [--dp N]
+      [--num-hosts H --host-id h]
 
 --adjacency selects the batched-graph representation end-to-end (sampler,
 trainer, evaluation, autotuner): 'dense' pads each kernel to a [N, N]
@@ -70,7 +71,20 @@ def main():
     ap.add_argument("--store", default="",
                     help="corpus store root: built on the first run, "
                          "streamed from disk on every later run")
+    ap.add_argument("--dp", type=int, default=0,
+                    help="data-parallel mesh size (0 = single-device path; "
+                         ">=1 runs the mesh train step on dp local devices "
+                         "— on CPU, export XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=<dp> first)")
+    ap.add_argument("--num-hosts", type=int, default=1,
+                    help="total training hosts (the sampler draws from "
+                         "this host's disjoint record shard)")
+    ap.add_argument("--host-id", type=int, default=0,
+                    help="this host's index in [0, --num-hosts)")
     args = ap.parse_args()
+    if args.num_hosts < 1 or not 0 <= args.host_id < args.num_hosts:
+        ap.error(f"--host-id must be in [0, --num-hosts={args.num_hosts}), "
+                 f"got {args.host_id}")
 
     # ---- data: synthetic families + imported architectures
     sim = TPUSimulator()
@@ -109,7 +123,9 @@ def main():
                          hidden_dim=64, opcode_embed_dim=16,
                          max_nodes=MAX_NODES, adjacency=args.adjacency)
     sampler = BalancedSampler(train_recs, norm, batch_size=24,
-                              max_nodes=MAX_NODES, adjacency=mc.adjacency)
+                              max_nodes=MAX_NODES, adjacency=mc.adjacency,
+                              host_id=args.host_id,
+                              num_hosts=args.num_hosts)
 
     def eval_fn(params, step):
         pred = learned_runtime_predictor(params, mc, norm,
@@ -124,7 +140,7 @@ def main():
                       log_every=100, ckpt_dir=args.ckpt_dir,
                       metrics_path=os.path.join(args.ckpt_dir,
                                                 "metrics.jsonl"),
-                      prefetch=args.prefetch,
+                      prefetch=args.prefetch, dp=args.dp,
                       optim=AdamWConfig(lr=2e-3)),
         sampler)
     res = trainer.run(eval_fn=eval_fn, eval_every=200)

@@ -4,8 +4,11 @@ Host-side feature encoding and the jitted device step are serialized in a
 naive training loop — the accelerator idles while Python encodes the next
 batch. `Prefetcher` wraps any sampler exposing ``batch(step) -> batch``
 (both `repro.data.sampler` samplers qualify — including over a
-`repro.data.store.StreamingCorpus`, where the worker thread also absorbs
-shard decode latency) and runs it on a background thread, keeping a
+`repro.data.store.StreamingCorpus` or one of its `.shard(idx, num)` worker
+views, where the worker thread also absorbs shard decode latency, and the
+mesh trainer's `GlobalBatchSampler`, whose [dp, ...] global batches are
+plain numpy pytrees like any other) and runs it on a background thread,
+keeping a
 bounded queue of ready batches so encoding of step k+1 overlaps the
 device work of step k.
 

@@ -477,6 +477,36 @@ class StreamingCorpus(Sequence):
                if e["program"] in name_set]
         return CorpusSubset(self, idx)
 
+    # -- worker sharding ----------------------------------------------------
+    def shard(self, idx: int, num: int) -> "CorpusSubset":
+        """Worker `idx`'s deterministic round-robin slice of the corpus
+        (records ``idx, idx+num, idx+2·num, …``), as a lazy manifest-only
+        view — the `ShardableDataset.shard(idx, num)` pattern that
+        data-parallel training shards the stream with.
+
+        Shards are **disjoint** and **exhaustive**: position-interleaving
+        the `num` shards reproduces the unsharded record stream
+        byte-identically (``full[i] == shard(i % num, num)[i // num]``).
+        ``shard(0, 1)`` is the identity view; every shard shares the
+        parent's decoded-shard LRU, so co-located workers don't decode a
+        file twice. Nothing is decoded by this call itself.
+
+        >>> import tempfile
+        >>> from repro.data.fusion_dataset import FusionKernelRecord
+        >>> from repro.data.synthetic import random_kernel
+        >>> recs = [FusionKernelRecord(random_kernel(6, seed=s), 1e-5,
+        ...                            program=f"p{s}") for s in range(5)]
+        >>> d = tempfile.mkdtemp()
+        >>> _ = write_corpus(d, "fusion", recs)
+        >>> c = StreamingCorpus.open(d)
+        >>> [len(c.shard(i, 2)) for i in (0, 1)]
+        [3, 2]
+        >>> (c.shard(0, 2).record_programs, c.shard(1, 2).record_programs)
+        (['p0', 'p2', 'p4'], ['p1', 'p3'])
+        """
+        _check_shard(idx, num)
+        return CorpusSubset(self, range(idx, len(self), num))
+
     # -- integrity ----------------------------------------------------------
     def verify(self) -> None:
         """Recompute every shard checksum; raises CorpusFormatError on any
@@ -491,10 +521,17 @@ class StreamingCorpus(Sequence):
             raise CorpusFormatError(f"{self.path}: manifest hash mismatch")
 
 
+def _check_shard(idx: int, num: int) -> None:
+    if num < 1:
+        raise ValueError(f"num shards must be >= 1, got {num}")
+    if not 0 <= idx < num:
+        raise ValueError(f"shard idx must be in [0, {num}), got {idx}")
+
+
 class CorpusSubset(Sequence):
     """Lazy index-mapped view over a `StreamingCorpus` (a train/val/test
-    split). Shares the parent's shard LRU; exposes `record_programs` so the
-    samplers index it without decoding anything."""
+    split or a worker shard). Shares the parent's shard LRU; exposes
+    `record_programs` so the samplers index it without decoding anything."""
 
     def __init__(self, corpus: StreamingCorpus, indices: Sequence[int]):
         self._corpus = corpus
@@ -504,6 +541,13 @@ class CorpusSubset(Sequence):
     def record_programs(self) -> list[str]:
         index = self._corpus.manifest["index"]
         return [index[i]["program"] for i in self._indices]
+
+    def shard(self, idx: int, num: int) -> "CorpusSubset":
+        """Round-robin sub-shard of this view (see `StreamingCorpus.shard`)
+        — composes with `select_programs`, so a worker can shard its train
+        split without materializing either."""
+        _check_shard(idx, num)
+        return CorpusSubset(self._corpus, self._indices[idx::num])
 
     def __len__(self) -> int:
         return len(self._indices)

@@ -40,6 +40,15 @@ def train_cost_model(args) -> None:
     from repro.training.optim import AdamWConfig
     from repro.training.trainer import CostModelTrainer, TrainerConfig
 
+    if args.num_hosts < 1:
+        raise SystemExit(f"--num-hosts must be >= 1, got {args.num_hosts}")
+    if not 0 <= args.host_id < args.num_hosts:
+        raise SystemExit(f"--host-id must be in [0, {args.num_hosts}), "
+                         f"got {args.host_id}")
+    if args.dp < 0 or args.mp < 1:
+        raise SystemExit(f"--dp must be >= 0 and --mp >= 1, "
+                         f"got dp={args.dp} mp={args.mp}")
+
     want_kind = "tile" if args.task.startswith("tile") else "fusion"
     if args.from_store:
         from repro.data.store import StreamingCorpus
@@ -71,16 +80,21 @@ def train_cost_model(args) -> None:
         norm = fit_tile_normalizer(recs)
         sampler = TileBatchSampler(recs, norm, kernels_per_batch=4,
                                    configs_per_kernel=8,
-                                   max_nodes=args.max_nodes)
+                                   max_nodes=args.max_nodes,
+                                   host_id=args.host_id,
+                                   num_hosts=args.num_hosts)
     else:
         norm = fit_normalizer([r.kernel for r in recs])
         sampler = BalancedSampler(recs, norm, batch_size=32,
-                                  max_nodes=args.max_nodes)
+                                  max_nodes=args.max_nodes,
+                                  host_id=args.host_id,
+                                  num_hosts=args.num_hosts)
     tc = TrainerConfig(task=args.task, steps=args.steps,
                        ckpt_every=args.ckpt_every, log_every=args.log_every,
                        ckpt_dir=args.ckpt_dir,
                        metrics_path=args.metrics_path,
                        compress_grads=args.compress_grads,
+                       dp=args.dp, mp=args.mp,
                        optim=AdamWConfig(lr=args.lr))
     trainer = CostModelTrainer(mc, tc, sampler)
     res = trainer.run(resume=not args.no_resume)
@@ -137,6 +151,17 @@ def main() -> None:
     cm.add_argument("--metrics-path", default="")
     cm.add_argument("--compress-grads", action="store_true")
     cm.add_argument("--no-resume", action="store_true")
+    cm.add_argument("--dp", type=int, default=0,
+                    help="data-parallel mesh size (0 = legacy single-device "
+                         "path; >=1 runs the mesh train step, DESIGN.md "
+                         "§13)")
+    cm.add_argument("--mp", type=int, default=1,
+                    help="model mesh axis size (params replicated)")
+    cm.add_argument("--num-hosts", type=int, default=1,
+                    help="total training hosts; this host's sampler draws "
+                         "from its disjoint record shard")
+    cm.add_argument("--host-id", type=int, default=0,
+                    help="this host's index in [0, --num-hosts)")
 
     lm_p = sub.add_parser("lm")
     lm_p.add_argument("--arch", required=True)

@@ -4,9 +4,11 @@ from repro.sharding.partition import (
     opt_specs,
     param_specs,
 )
-from repro.sharding.context import activation_sharding, constrain, dp_axes, \
-    shard_map_nocheck
+from repro.sharding.context import activation_sharding, constrain, \
+    constrain_batch_tree, dp_axes, shard_map_nocheck
+from repro.sharding.mesh import DATA_AXIS, MODEL_AXIS, make_train_mesh
 
 __all__ = ["batch_specs", "cache_specs", "opt_specs", "param_specs",
-           "activation_sharding", "constrain", "dp_axes",
-           "shard_map_nocheck"]
+           "activation_sharding", "constrain", "constrain_batch_tree",
+           "dp_axes", "shard_map_nocheck",
+           "DATA_AXIS", "MODEL_AXIS", "make_train_mesh"]

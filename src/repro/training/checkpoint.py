@@ -70,10 +70,19 @@ def _leaf_paths(tree):
 
 def save_checkpoint(ckpt_dir: str, step: int, state, *,
                     meta: dict | None = None, keep: int = 3) -> str:
-    """Save `state` (any pytree of arrays) for `step`. Returns final path."""
+    """Save `state` (any pytree of arrays) for `step`. Returns final path.
+
+    Multi-host discipline is process-0-writes / all-restore: non-primary
+    processes return the would-be path without touching disk (leaves are
+    device_get to full host arrays, so process 0 holds every byte), while
+    `restore_checkpoint` runs on every process and re-places leaves with
+    whatever shardings its mesh wants.
+    """
+    final = os.path.join(ckpt_dir, f"{_PREFIX}{step:08d}")
+    if jax.process_index() != 0:
+        return final
     os.makedirs(ckpt_dir, exist_ok=True)
     tmp = os.path.join(ckpt_dir, f".tmp-{step}")
-    final = os.path.join(ckpt_dir, f"{_PREFIX}{step:08d}")
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)

@@ -27,6 +27,18 @@ a split view of one): records then stream shard-by-shard from disk as
 batches draw them, with a byte-identical batch stream to in-memory records
 — `python -m repro.launch.train cost-model --from-store` is this path
 (DESIGN.md §11, docs/DATA.md).
+
+With `TrainerConfig.dp >= 1` the trainer runs the *mesh train step*
+(DESIGN.md §13): a ``(dp, mp)`` mesh from `repro.sharding.make_train_mesh`,
+the sampler wrapped in a `GlobalBatchSampler` whose batches carry a leading
+[dp] device axis (each device trains on its own disjoint record shard),
+per-device forward/backward under `shard_map` with psum'd loss and grads
+— int8-compressed when `compress_grads` (which composes with sparse
+batches here: the *global* batch has the leading axis the legacy path
+lacked). ``dp=1`` is bit-identical to the legacy jit path — same batch
+stream, same rng fold, pmean over a size-1 axis is exact. Checkpoints are
+written by process 0 only and restore onto any dp layout (error-feedback
+buffers, the one per-device-layout state, restart at zero across layouts).
 """
 from __future__ import annotations
 
@@ -63,6 +75,12 @@ class TrainerConfig:
     metrics_path: str = ""
     compress_grads: bool = False          # int8 + error feedback over DP axis
     data_axis: str = "data"
+    # mesh train step (DESIGN.md §13): dp=0 keeps the legacy single-device
+    # jit path bit-for-bit; dp>=1 builds a (dp, mp) mesh, wraps the sampler
+    # in a GlobalBatchSampler and shards the leading batch axis over
+    # `data_axis`. dp=1 is bit-identical to dp=0 (bench_scaling gates it).
+    dp: int = 0
+    mp: int = 1                           # model axis size (params replicated)
     # async input pipeline (DESIGN.md §9): number of batches a background
     # thread encodes ahead of the jitted step (0 = synchronous encode). The
     # delivered batch stream is byte-identical either way; `.run` owns the
@@ -82,19 +100,30 @@ class CostModelTrainer:
                  sampler, mesh: Mesh | None = None):
         self.model_cfg = model_cfg
         self.cfg = cfg
-        self.sampler = sampler
-        self.mesh = mesh or make_mesh_1d(cfg.data_axis)
         self.step = 0
         self._stop = False
         self._metrics_f = None
+        self._use_mesh = cfg.dp >= 1
+
+        if cfg.dp < 0 or cfg.mp < 1:
+            raise ValueError(f"dp must be >= 0 and mp >= 1, "
+                             f"got dp={cfg.dp} mp={cfg.mp}")
 
         # reject dense-only config combos here rather than as a
         # NotImplementedError buried in the first step's jit trace
+        if self._use_mesh and model_cfg.adjacency == "segmented":
+            raise ValueError(
+                "segmented batches have no uniform leading axis to shard "
+                "over the mesh — use adjacency='dense' or 'sparse' with "
+                "TrainerConfig.dp")
         if model_cfg.adjacency in ("sparse", "segmented"):
-            if cfg.compress_grads:
+            if cfg.compress_grads and not self._use_mesh:
                 raise ValueError(
-                    "compress_grads shards batches on a leading batch dim; "
-                    "packed sparse batches have none — use adjacency='dense'")
+                    "compress_grads=True needs a leading batch dim to shard "
+                    "and packed sparse batches have none; the mesh train "
+                    "step stacks per-device sub-batches with one — set "
+                    "TrainerConfig.dp >= 1 (compress_grads composes with "
+                    "adjacency='sparse' there) or use adjacency='dense'")
             if model_cfg.use_pallas_aggregate:
                 raise ValueError(
                     "use_pallas_aggregate targets the dense [B,N,N] layout "
@@ -104,11 +133,36 @@ class CostModelTrainer:
                     "undirected GAT is dense-only (DESIGN.md §4) — use "
                     "adjacency='dense'")
 
+        if self._use_mesh:
+            from repro.data.sampler import GlobalBatchSampler
+            from repro.sharding.mesh import DATA_AXIS, make_train_mesh
+            if cfg.data_axis != DATA_AXIS:
+                raise ValueError(
+                    f"the mesh train step uses axis {DATA_AXIS!r}; got "
+                    f"data_axis={cfg.data_axis!r}")
+            self.mesh = mesh or make_train_mesh(cfg.dp, cfg.mp)
+            if isinstance(sampler, GlobalBatchSampler):
+                if sampler.num_shards != cfg.dp:
+                    raise ValueError(
+                        f"GlobalBatchSampler has {sampler.num_shards} "
+                        f"shards but dp={cfg.dp}")
+                self.sampler = sampler
+            else:
+                self.sampler = GlobalBatchSampler.for_mesh(sampler, cfg.dp)
+        else:
+            self.mesh = mesh or make_mesh_1d(cfg.data_axis)
+            self.sampler = sampler
+
         key = jax.random.key(cfg.seed)
         self.params = cost_model_init(key, model_cfg)
         self.opt_state = adamw_init(self.params)
         if cfg.compress_grads:
-            self.opt_state["ef"] = zeros_like_error(self.params)
+            ef = zeros_like_error(self.params)
+            if self._use_mesh:
+                # per-DEVICE residuals: leading [dp] axis, sharded P(data)
+                ef = jax.tree_util.tree_map(
+                    lambda x: jnp.zeros((cfg.dp,) + x.shape, x.dtype), ef)
+            self.opt_state["ef"] = ef
 
         self._train_step = self._build_train_step()
 
@@ -129,6 +183,8 @@ class CostModelTrainer:
         raise ValueError(f"unknown task {self.cfg.task!r}")
 
     def _build_train_step(self):
+        if self._use_mesh:
+            return self._build_mesh_step()
         cfg = self.cfg
         mesh = self.mesh
         data_spec = P(cfg.data_axis)
@@ -189,6 +245,73 @@ class CostModelTrainer:
         self._batch_shardings = batch_shardings
         return jax.jit(shmap_step, donate_argnums=(0,))
 
+    def _build_mesh_step(self):
+        """The dp (x mp) mesh train step (DESIGN.md §13).
+
+        Inputs carry a leading [dp] device axis (GlobalBatchSampler); the
+        step shards it over `data_axis`, runs the per-device
+        forward/backward under shard_map, and psums loss + grads (int8
+        `compressed_allreduce` when `compress_grads` — its error-feedback
+        residuals live in `opt_state['ef']` with the same leading [dp]
+        axis). The optimizer update runs once on the replicated mean
+        gradient outside the shard_map, so params never diverge across
+        devices. dp=1 is bit-identical to the legacy jit path: identical
+        batch, identical rng, and psum/pmean over a size-1 axis is exact.
+        """
+        cfg = self.cfg
+        mesh = self.mesh
+        axis = cfg.data_axis
+        compress = cfg.compress_grads
+
+        from repro.sharding.context import (constrain_batch_tree,
+                                            shard_map_nocheck)
+
+        def repl(tree):
+            return jax.tree_util.tree_map(lambda _: P(), tree)
+
+        def lead(tree):
+            return jax.tree_util.tree_map(lambda _: P(axis), tree)
+
+        def squeeze(tree):
+            return jax.tree_util.tree_map(lambda x: x[0], tree)
+
+        def local(params, batch, targets, group_ids, valid, rngs, ef):
+            loss, grads = jax.value_and_grad(self._loss_fn)(
+                params, squeeze(batch), targets[0], group_ids[0], valid[0],
+                rngs[0])
+            if compress:
+                grads, new_ef = compressed_allreduce(grads, squeeze(ef),
+                                                     axis)
+                new_ef = jax.tree_util.tree_map(lambda x: x[None], new_ef)
+            else:
+                grads = jax.lax.pmean(grads, axis)
+                new_ef = ef
+            return jax.lax.pmean(loss, axis), grads, new_ef
+
+        @partial(jax.jit, donate_argnums=(0,))
+        def mesh_step(params, opt_state, batch, targets, group_ids, valid,
+                      rngs):
+            batch = constrain_batch_tree(batch, leading=0)
+            targets, group_ids, valid = constrain_batch_tree(
+                (targets, group_ids, valid), leading=0)
+            ef = opt_state.get("ef") if compress else {}
+            loss, grads, new_ef = shard_map_nocheck(
+                local, mesh,
+                in_specs=(repl(params), lead(batch), P(axis), P(axis),
+                          P(axis), P(axis), lead(ef)),
+                out_specs=(P(), repl(params), lead(ef)),
+            )(params, batch, targets, group_ids, valid, rngs, ef)
+            opt_no_ef = {k: v for k, v in opt_state.items() if k != "ef"}
+            new_params, new_opt, stats = adamw_update(
+                params, grads, opt_no_ef, cfg.optim)
+            if compress:
+                new_opt["ef"] = new_ef
+            stats["loss"] = loss
+            return new_params, new_opt, stats
+
+        self._batch_shardings = None
+        return mesh_step
+
     # ------------------------------------------------------------------
     def _install_signal_handlers(self):
         def handler(signum, frame):
@@ -218,6 +341,20 @@ class CostModelTrainer:
                   "task": self.cfg.task},
             keep=self.cfg.keep_ckpts)
 
+    def _state_shardings(self, like):
+        """NamedSharding tree for `like`: everything replicated over the
+        mesh except the per-device error-feedback residuals, which shard
+        their leading [dp] axis over the data axis."""
+        if not self._use_mesh:
+            return None
+        repl = NamedSharding(self.mesh, P())
+        sh = jax.tree_util.tree_map(lambda _: repl, like)
+        if "ef" in like.get("opt", {}):
+            dps = NamedSharding(self.mesh, P(self.cfg.data_axis))
+            sh["opt"]["ef"] = jax.tree_util.tree_map(
+                lambda _: dps, like["opt"]["ef"])
+        return sh
+
     def maybe_resume(self) -> bool:
         if not self.cfg.ckpt_dir:
             return False
@@ -225,7 +362,26 @@ class CostModelTrainer:
         if latest is None:
             return False
         like = {"params": self.params, "opt": self.opt_state}
-        state, step, _ = ckpt_lib.restore_checkpoint(self.cfg.ckpt_dir, like)
+        try:
+            state, step, _ = ckpt_lib.restore_checkpoint(
+                self.cfg.ckpt_dir, like,
+                shardings=self._state_shardings(like))
+        except ValueError:
+            if "ef" not in self.opt_state:
+                raise
+            # cross-dp-layout restore: error-feedback residuals are
+            # per-device [dp, ...] state, so a checkpoint from a different
+            # dp layout can't be mapped onto this one — restore everything
+            # else bit-exactly and restart the residuals at zero (they are
+            # quantization carry, not model state)
+            like = {"params": self.params,
+                    "opt": {k: v for k, v in self.opt_state.items()
+                            if k != "ef"}}
+            state, step, _ = ckpt_lib.restore_checkpoint(
+                self.cfg.ckpt_dir, like,
+                shardings=self._state_shardings(like))
+            state["opt"]["ef"] = jax.tree_util.tree_map(
+                jnp.zeros_like, self.opt_state["ef"])
         self.params, self.opt_state = state["params"], state["opt"]
         self.step = step
         return True
@@ -246,10 +402,29 @@ class CostModelTrainer:
                                  start_step=self.step,
                                  device_put=cfg.prefetch_device_put)
         try:
+            if self._use_mesh:
+                from repro.sharding.context import activation_sharding
+                mapping = {"dp": cfg.data_axis,
+                           "axis_sizes": {cfg.data_axis: cfg.dp,
+                                          "model": cfg.mp}}
+                with self.mesh, activation_sharding(mapping):
+                    return self._run_loop(sampler, total, eval_fn,
+                                          eval_every)
             return self._run_loop(sampler, total, eval_fn, eval_every)
         finally:
             if sampler is not self.sampler:
                 sampler.close()
+
+    def _step_rng(self, step: int):
+        base = jax.random.key(self.cfg.seed + 1)
+        if not self._use_mesh:
+            return jax.random.fold_in(base, step)
+        # one key per device, folded from the SAME ladder the legacy path
+        # climbs: device d of dp at step k folds in k*dp + d, so dp=1
+        # device 0 gets fold_in(base, k) — bit-identical to legacy
+        dp = self.cfg.dp
+        return jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+            base, step * dp + jnp.arange(dp))
 
     def _run_loop(self, sampler, total: int, eval_fn, eval_every) -> dict:
         cfg = self.cfg
@@ -257,7 +432,7 @@ class CostModelTrainer:
         last_loss = float("nan")
         while self.step < total and not self._stop:
             b = sampler.batch(self.step)
-            rng = jax.random.fold_in(jax.random.key(cfg.seed + 1), self.step)
+            rng = self._step_rng(self.step)
             group_ids = getattr(b, "group_ids",
                                 np.zeros_like(b.targets, np.int32))
             self.params, self.opt_state, stats = self._train_step(

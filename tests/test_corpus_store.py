@@ -268,3 +268,123 @@ def test_select_programs_view(fusion_records, tmp_path):
     norm = fit_normalizer([sub[0].kernel])
     s = BalancedSampler(sub, norm, batch_size=4, max_nodes=24, seed=0)
     assert s.batch(0).targets.shape == (4,)
+
+# ------------------------------------------------- worker shard properties
+# `StreamingCorpus.shard(idx, num)` (DESIGN.md §13): deterministic,
+# disjoint, manifest-only round-robin views whose position interleave is
+# the unsharded stream. Property tests can't take pytest fixtures (the
+# hypothesis @given wrapper owns the signature), so they share one
+# module-memoized on-disk corpus.
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.data.sampler import shard_records  # noqa: E402
+from repro.data.store import CorpusSubset  # noqa: E402
+
+_SHARD_CORPUS: dict = {}
+
+
+def _shard_corpus() -> StreamingCorpus:
+    if "c" not in _SHARD_CORPUS:
+        import tempfile
+        sim = TPUSimulator()
+        kernels = [random_kernel(n, seed=i)
+                   for i, n in enumerate((10, 14, 18, 12, 16, 20, 11))]
+        recs = build_tile_records(kernels, sim, max_configs_per_kernel=4)
+        d = tempfile.mkdtemp(prefix="shard_corpus_")
+        write_corpus(d, "tile", recs, shard_records=3)
+        _SHARD_CORPUS["c"] = StreamingCorpus.open(d, max_cached_shards=2)
+    return _SHARD_CORPUS["c"]
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(min_value=1, max_value=9))
+def test_shards_disjoint_exhaustive_interleave(num):
+    corpus = _shard_corpus()
+    shards = [corpus.shard(i, num) for i in range(num)]
+    assert sum(len(s) for s in shards) == len(corpus)
+    keys = [record_key(r) for s in shards for r in s]
+    assert len(set(keys)) == len(keys)                      # disjoint
+    for k in range(len(corpus)):                            # exhaustive +
+        got = shards[k % num][k // num]                     # ordered union
+        want = corpus[k]
+        assert record_key(got) == record_key(want)
+        np.testing.assert_array_equal(got.runtimes, want.runtimes)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(min_value=1, max_value=6),
+       st.integers(min_value=0, max_value=5))
+def test_shard_deterministic_and_manifest_only(num, idx):
+    corpus = _shard_corpus()
+    idx = idx % num
+    a, b = corpus.shard(idx, num), corpus.shard(idx, num)
+    # same records on every call, computed from the manifest alone
+    assert a._indices == b._indices == list(range(idx, len(corpus), num))
+    assert [r["key"] for r in
+            (corpus.manifest["index"][i] for i in a._indices)] == \
+        [record_key(r) for r in a]
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=2, max_value=4),
+       st.integers(min_value=2, max_value=3))
+def test_shard_composes_with_subshard(num, sub):
+    """shard().shard() flattens to one round-robin over num*sub workers."""
+    corpus = _shard_corpus()
+    nested = corpus.shard(1 % num, num).shard(1 % sub, sub)
+    want = list(range(len(corpus)))[1 % num::num][1 % sub::sub]
+    assert nested._indices == want
+
+
+def test_shard_identity_view_shares_parent_lru():
+    corpus = _shard_corpus()
+    view = corpus.shard(0, 1)
+    assert isinstance(view, CorpusSubset)
+    assert view._corpus is corpus                 # same LRU, no copy
+    assert len(view) == len(corpus)
+    assert [record_key(r) for r in view] == \
+        [record_key(r) for r in corpus]
+    corpus._cache.clear()
+    _ = view[0]                                   # decode through the view…
+    assert len(corpus._cache) == 1                # …lands in the parent LRU
+
+
+def test_shard_validation_errors():
+    corpus = _shard_corpus()
+    with pytest.raises(ValueError):
+        corpus.shard(0, 0)
+    with pytest.raises(ValueError):
+        corpus.shard(2, 2)
+    with pytest.raises(ValueError):
+        corpus.shard(-1, 2)
+    with pytest.raises(ValueError):
+        corpus.shard(0, 2).shard(3, 3)
+
+
+def test_shard_records_prefers_manifest_view():
+    corpus = _shard_corpus()
+    view = shard_records(corpus, 1, 3)
+    assert isinstance(view, CorpusSubset)         # no decode, no list copy
+    assert view._corpus is corpus
+    # plain lists fall back to strided slicing with identical membership
+    recs = list(corpus)
+    assert [record_key(r) for r in shard_records(recs, 1, 3)] == \
+        [record_key(r) for r in view]
+    assert shard_records(recs, 0, 1) is recs      # num=1: untouched
+
+
+@pytest.mark.slow
+def test_shard_deterministic_under_build_workers(tmp_path):
+    """The shard views of a corpus built with --workers N are identical to
+    the serial build's — partitioning the build cannot move records
+    between worker shards."""
+    kw = dict(kinds=("tile",), programs=6, seed=0,
+              tile_opts={"max_configs_per_kernel": 6}, quiet=True)
+    build_corpus(str(tmp_path / "w1"), workers=1, **kw)
+    build_corpus(str(tmp_path / "w2"), workers=2, **kw)
+    c1 = StreamingCorpus.open(str(tmp_path / "w1" / "tile"))
+    c2 = StreamingCorpus.open(str(tmp_path / "w2" / "tile"))
+    for w in (2, 3):
+        for i in range(w):
+            assert [record_key(r) for r in c1.shard(i, w)] == \
+                [record_key(r) for r in c2.shard(i, w)]
