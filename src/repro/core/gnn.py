@@ -285,6 +285,73 @@ def sage_apply_sparse(params: dict, eps: jnp.ndarray, edge_src: jnp.ndarray,
     return _apply_stack(params, eps, layer_fn)
 
 
+def _f2_qs(leaf: dict):
+    """(weights, per-output-channel scale) of one f2 module for the fused
+    kernel: int8 q + its scale for a `quant.scale.QuantizedLeaf`, the f32
+    weight with unit scales otherwise (the kernel's dequant is then a
+    no-op multiply, so the f32 sparse-Pallas path costs nothing extra)."""
+    from repro.quant.scale import QuantizedLeaf
+    w = leaf["w"]
+    if isinstance(w, QuantizedLeaf):
+        return w.q, w.scale.reshape(1, -1)
+    return w, jnp.ones((1, w.shape[-1]), jnp.float32)
+
+
+def sage_layer_apply_sparse_q(params: dict, eps: jnp.ndarray,
+                              edge_src: jnp.ndarray, edge_dst: jnp.ndarray,
+                              edge_mask: jnp.ndarray, node_mask: jnp.ndarray,
+                              *, aggregator: str = "mean",
+                              directed: bool = True,
+                              interpret: bool = False) -> jnp.ndarray:
+    """`sage_layer_apply_sparse` with the transform+aggregate fused into
+    the `repro.kernels.segment_aggregate` Pallas kernel (inference-only —
+    the kernel has no VJP; the trainer stays on the jnp twin). The f2
+    weights may be int8 `QuantizedLeaf`s (dequantized in-VMEM, DESIGN.md
+    §14) or plain f32; f3 is dequantized outside the kernel either way."""
+    from repro.kernels.segment_aggregate.ops import segment_aggregate
+    from repro.quant.scale import leaf_f32
+    _TRACE_COUNTS["sparse"] += 1
+    mean = aggregator == "mean"
+
+    def fused(leaf, gather, scatter):
+        w, scale = _f2_qs(leaf)
+        return segment_aggregate(eps, w, scale, gather, scatter, edge_mask,
+                                 node_mask, act="relu", mean=mean,
+                                 interpret=interpret)
+
+    agg_in = fused(params["f2_in"], edge_src, edge_dst)
+    parts = [eps, agg_in]
+    if directed:
+        parts.append(fused(params["f2_out"], edge_dst, edge_src))
+    else:
+        agg_out = fused(params["f2_in"], edge_dst, edge_src)
+        parts[1] = 0.5 * (agg_in + agg_out)
+    f3 = {"w": leaf_f32(params["f3"]["w"])}
+    h = dense_apply(f3, jnp.concatenate(parts, axis=-1))
+    h = jax.nn.relu(h)
+    return l2_normalize(h, axis=-1) * node_mask[:, None]
+
+
+def sage_apply_sparse_q(params: dict, eps: jnp.ndarray,
+                        edge_src: jnp.ndarray, edge_dst: jnp.ndarray,
+                        edge_mask: jnp.ndarray, node_mask: jnp.ndarray, *,
+                        aggregator: str = "mean", directed: bool = True,
+                        interpret: bool | None = None) -> jnp.ndarray:
+    """Kernel-backed twin of `sage_apply_sparse` (f32 or int8 params).
+    `interpret` defaults to CPU-backend detection, like the dense
+    `use_pallas` path."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    def layer_fn(layer, h):
+        return sage_layer_apply_sparse_q(layer, h, edge_src, edge_dst,
+                                         edge_mask, node_mask,
+                                         aggregator=aggregator,
+                                         directed=directed,
+                                         interpret=interpret)
+    return _apply_stack(params, eps, layer_fn)
+
+
 # ----------------------------------------------------------------------------
 # GAT
 # ----------------------------------------------------------------------------

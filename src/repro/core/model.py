@@ -68,6 +68,27 @@ class CostModelConfig:
     # is depth-independent (DESIGN.md §12). Either layout of an on-disk
     # checkpoint restores into either setting (training/checkpoint.py).
     scan_layers: bool = False
+    # Numeric format of the parameter tree `cost_model_apply` receives:
+    # 'f32' (plain arrays) or 'int8' (repro.quant — weights are
+    # `QuantizedLeaf`s, dequantized inside jit; with use_pallas_aggregate
+    # on the sparse layouts the GNN f2 weights instead stay int8 all the
+    # way into the fused segment_aggregate kernel). Inference-only: the
+    # trainer always trains f32 and `repro.quant.quantize_params`
+    # produces the int8 tree afterwards (DESIGN.md §14).
+    precision: str = "f32"
+
+    def __post_init__(self):
+        if self.adjacency not in ("dense", "sparse", "segmented"):
+            raise ValueError(f"unknown adjacency {self.adjacency!r} "
+                             "(dense | sparse | segmented)")
+        if self.precision not in ("f32", "int8"):
+            raise ValueError(f"unknown precision {self.precision!r} "
+                             "(f32 | int8)")
+        if self.use_pallas_aggregate and self.gnn != "graphsage":
+            raise ValueError(
+                f"use_pallas_aggregate supports gnn='graphsage' only, got "
+                f"gnn={self.gnn!r} (dense layout: kernels/graph_aggregate; "
+                "sparse/segmented: kernels/segment_aggregate)")
 
     def to_dict(self) -> dict:
         return asdict(self)
@@ -124,6 +145,17 @@ def cost_model_apply(params: dict, cfg: CostModelConfig, batch,
     """batch: features.GraphBatch or features.SparseGraphBatch (pytrees).
     Returns predictions [B] (one per graph slot). Both representations share
     one parameter tree and agree numerically (DESIGN.md §4)."""
+    if cfg.precision == "int8":
+        from repro.quant.scale import dequantize_tree
+        # sparse/segmented + Pallas: the GNN tree stays quantized — its f2
+        # weights feed the segment_aggregate kernel as int8 and are
+        # dequantized in-VMEM; everything else decodes here, inside jit
+        keep_gnn = (cfg.use_pallas_aggregate and "gnn" in params
+                    and not isinstance(batch, F.GraphBatch))
+        gnn_q = params["gnn"] if keep_gnn else None
+        params = dequantize_tree(params)
+        if gnn_q is not None:
+            params = dict(params, gnn=gnn_q)
     if isinstance(batch, F.SegmentedGraphBatch):
         return _cost_model_apply_segmented(params, cfg, batch, rng=rng,
                                            deterministic=deterministic)
@@ -204,10 +236,13 @@ def _embed_sparse(params: dict, cfg: CostModelConfig, batch) -> jnp.ndarray:
 
     if cfg.gnn == "graphsage":
         if cfg.use_pallas_aggregate:
-            raise NotImplementedError(
-                "use_pallas_aggregate targets the dense [B,N,N] layout; "
-                "use adjacency='dense' with it")
-        eps = G.sage_apply_sparse(params["gnn"], eps, batch.edge_src,
+            # fused kernels/segment_aggregate path (f32 or int8 f2 weights)
+            eps = G.sage_apply_sparse_q(params["gnn"], eps, batch.edge_src,
+                                        batch.edge_dst, batch.edge_mask,
+                                        mask, aggregator=cfg.aggregator,
+                                        directed=cfg.directed)
+        else:
+            eps = G.sage_apply_sparse(params["gnn"], eps, batch.edge_src,
                                       batch.edge_dst, batch.edge_mask, mask,
                                       aggregator=cfg.aggregator,
                                       directed=cfg.directed)

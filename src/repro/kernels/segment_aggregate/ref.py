@@ -1,0 +1,36 @@
+"""Edge-loop oracle for segment_aggregate — the fused kernel's semantics
+spelled out as a sequential numpy loop over the packed edge list, so the
+Pallas one-hot-matmul formulation is checked against an independent
+derivation (mirrors graph_aggregate/ref.py)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def segment_aggregate_ref(x: np.ndarray, w: np.ndarray, w_scale: np.ndarray,
+                          gather: np.ndarray, scatter: np.ndarray,
+                          edge_mask: np.ndarray, node_mask: np.ndarray, *,
+                          act: str = "relu", mean: bool = True) -> np.ndarray:
+    """x: [M, D] f32 node buffer; w: [D, F] int8 (or f32) with per-output-
+    channel `w_scale` [1, F] (pass ones for f32 weights); gather/scatter:
+    [E] flat node indices (message read at `gather`, summed into
+    `scatter`); edge_mask: [E]; node_mask: [M]. Returns [M, F] f32 —
+    ``segment_aggregate(act((x·node_mask) @ (w·w_scale)), edges)`` with
+    optional mean over in-degree, i.e. one GraphSAGE hop's
+    transform+aggregate (core/gnn.py `_segment_aggregate`)."""
+    xm = np.asarray(x, np.float32) * np.asarray(node_mask, np.float32)[:, None]
+    wf = np.asarray(w, np.float32) * np.asarray(w_scale, np.float32).reshape(
+        1, -1)
+    msg = xm @ wf
+    if act == "relu":
+        msg = np.maximum(msg, 0.0)
+    M, F = msg.shape
+    out = np.zeros((M, F), np.float32)
+    deg = np.zeros((M,), np.float32)
+    for g, s, m in zip(np.asarray(gather), np.asarray(scatter),
+                       np.asarray(edge_mask, np.float32)):
+        out[s] += m * msg[g]
+        deg[s] += m
+    if mean:
+        out = out / np.maximum(deg, 1.0)[:, None]
+    return out

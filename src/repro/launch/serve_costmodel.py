@@ -36,6 +36,9 @@ Flags:
   --chunk N           dense chunk width                       (default 128)
   --hidden-dim N      model width (untrained params; serving  (default 48)
                       throughput does not depend on training)
+  --precision P       f32 | int8 serving weights (int8 runs   (default f32)
+                      `repro.quant.quantize_params` on the
+                      init params, calibrated on the stream)
   --seed N            corpus/model seed                       (default 0)
   --compare-direct    also time uncached per-request scoring
   --listen H:P        serve over a socket instead of replaying locally
@@ -60,6 +63,19 @@ def _host_port(spec: str) -> tuple[str, int]:
     return host, int(port)
 
 
+def _maybe_quantize(params, cfg, replay, args):
+    """--precision int8: quantize the weights per-channel, calibrating on
+    a slice of the replay stream; returns the (params, cfg) to serve."""
+    if args.precision != "int8":
+        return params, cfg
+    from repro.quant import quantize_params
+
+    calib = [g for req in replay.requests[:4] for g in req]
+    qm = quantize_params(params, cfg, calib_graphs=calib,
+                         normalizer=replay.normalizer)
+    return qm.params, qm.serving_config(cfg)
+
+
 def _serve(args) -> int:
     """--listen: stand up the model + socket server, block until ^C."""
     import jax
@@ -79,6 +95,7 @@ def _serve(args) -> int:
                           dropout=0.0, max_nodes=max_nodes,
                           adjacency=args.adjacency)
     params = cost_model_init(jax.random.key(args.seed), cfg)
+    params, cfg = _maybe_quantize(params, cfg, replay, args)
     service = CostModelService(params, cfg, replay.normalizer,
                                cache_capacity=args.cache_capacity,
                                node_budget=args.node_budget,
@@ -148,6 +165,7 @@ def main() -> int:
     ap.add_argument("--node-budget", type=int, default=None)
     ap.add_argument("--chunk", type=int, default=128)
     ap.add_argument("--hidden-dim", type=int, default=48)
+    ap.add_argument("--precision", choices=("f32", "int8"), default="f32")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--compare-direct", action="store_true")
     mode = ap.add_mutually_exclusive_group()
@@ -179,10 +197,12 @@ def main() -> int:
                           dropout=0.0, max_nodes=max_nodes,
                           adjacency=args.adjacency)
     params = cost_model_init(jax.random.key(args.seed), cfg)
+    params, cfg = _maybe_quantize(params, cfg, replay, args)
     predict_fn = make_predict_fn(cfg)
     print(f"replay: {replay.num_kernels} kernels, "
           f"{len(replay.requests)} requests, {replay.num_queries} queries "
-          f"({replay.num_unique} unique graphs), adjacency={args.adjacency}")
+          f"({replay.num_unique} unique graphs), adjacency={args.adjacency}, "
+          f"precision={cfg.precision}")
 
     def make_service() -> CostModelService:
         return CostModelService(params, cfg, replay.normalizer,

@@ -1,0 +1,56 @@
+"""Int8 quantized inference for the cost model (DESIGN.md §14).
+
+* `repro.quant.scale` — the shared symmetric-int8 primitives
+  (scale/clip/round + `QuantizedLeaf`), also used by
+  `training.compression` for the int8 gradient all-reduce;
+* `repro.quant.quantize` — per-channel weight quantization of a trained
+  model (`quantize_params` → `QuantizedCostModel`), activation
+  calibration, and the checkpoint sidecar (`save_quantized` /
+  `load_quantized`).
+
+Exports resolve lazily (PEP 562): `repro.quant.scale` names import
+without pulling the model stack in.
+"""
+import importlib
+
+_EXPORTS = {
+    # scale math (jax-only)
+    "INT8_MAX": "repro.quant.scale",
+    "QuantizedLeaf": "repro.quant.scale",
+    "amax_scale": "repro.quant.scale",
+    "dequantize_int8": "repro.quant.scale",
+    "dequantize_tree": "repro.quant.scale",
+    "leaf_f32": "repro.quant.scale",
+    "per_channel_scale": "repro.quant.scale",
+    "quantize_int8": "repro.quant.scale",
+    "tree_is_quantized": "repro.quant.scale",
+    # model quantization (imports the core model stack)
+    "QuantizedCostModel": "repro.quant.quantize",
+    "calibrate_activations": "repro.quant.quantize",
+    "dequantize_params": "repro.quant.quantize",
+    "load_quantized": "repro.quant.quantize",
+    "quantize_params": "repro.quant.quantize",
+    "save_quantized": "repro.quant.quantize",
+    "tree_bytes": "repro.quant.quantize",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    target = _EXPORTS.get(name)
+    if target is not None:
+        value = getattr(importlib.import_module(target), name)
+        globals()[name] = value
+        return value
+    try:
+        return importlib.import_module(f"{__name__}.{name}")
+    except ModuleNotFoundError as e:
+        if e.name != f"{__name__}.{name}":
+            raise
+        raise AttributeError(
+            f"module 'repro.quant' has no attribute {name!r}") from None
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,0 +1,313 @@
+"""Per-channel int8 weight quantization of a trained cost model
+(DESIGN.md §14).
+
+`quantize_params` walks a trained f32 parameter tree and replaces every
+weight matrix (float leaf with ≥2 dims and ≥ `min_size` elements — dense
+``w``s, the opcode embedding table, stacked ``[L, ...]`` GNN leaves) with
+a `quant.scale.QuantizedLeaf`: symmetric int8 values plus per-output-
+channel scales (per *layer and* channel for stacked leaves, so the
+scan-over-layers path slices both fields along L). Small leaves — biases,
+GAT attention vectors — stay f32; they are noise in the byte count and
+disproportionately expensive in error.
+
+Serving the result is `CostModelConfig(precision="int8")` +
+`cost_model_apply` (core/model.py): weights live and move as int8 (~¼
+the f32 bytes) and decode inside jit — either a fused multiply per leaf,
+or in-VMEM inside `kernels/segment_aggregate` on the sparse Pallas path.
+`CostModelService` / `LearnedEstimator.from_params` accept a
+`QuantizedCostModel` directly and pick the quantized backend themselves.
+
+Activation calibration (`calibrate_activations`) runs a corpus sample
+through the f32 sparse forward and records per-stage abs-maxes. The
+GraphSAGE stages are l2-normalized, so only the f1 output genuinely
+needs data — but the measured scales ship in the `QuantizedCostModel`
+(and its sidecar) for any backend that wants full int8×int8 compute.
+
+The sidecar (`save_quantized`/`load_quantized`) is one checksummed npz
+next to the training checkpoint — quantize once, serve anywhere — and
+round-trips the tree bit-exactly (tests/test_quantization.py).
+
+>>> import jax
+>>> from repro.core.model import CostModelConfig, cost_model_init
+>>> cfg = CostModelConfig(hidden_dim=16, opcode_embed_dim=4,
+...                       reduction="per_node", adjacency="sparse")
+>>> params = cost_model_init(jax.random.key(0), cfg)
+>>> qm = quantize_params(params, cfg)
+>>> qm.serving_config().precision
+'int8'
+>>> qm.num_quantized > 0 and qm.quantized_bytes() < tree_bytes(params)
+True
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.scale import (
+    QuantizedLeaf,
+    amax_scale,
+    dequantize_tree,
+    quantize_int8,
+)
+
+SIDECAR_VERSION = 1
+DEFAULT_MIN_SIZE = 256
+
+
+# ----------------------------------------------------------------------------
+# Tree walking (the training/checkpoint.py key-path convention)
+# ----------------------------------------------------------------------------
+def _key_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def _is_qleaf(x) -> bool:
+    return isinstance(x, QuantizedLeaf)
+
+
+def quantize_params(params, model_cfg=None, *, calib_graphs=None,
+                    normalizer=None,
+                    min_size: int = DEFAULT_MIN_SIZE) -> "QuantizedCostModel":
+    """Quantize a trained f32 tree; returns a `QuantizedCostModel`.
+
+    `model_cfg` (a `CostModelConfig`) is embedded — with
+    ``precision="int8"`` — as the model's serving config. `calib_graphs`
+    (+ `normalizer`) run activation calibration on a corpus sample.
+    """
+    def one(path, x):
+        key = _key_str(path)
+        if (hasattr(x, "ndim") and x.ndim >= 2 and x.size >= min_size
+                and jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)):
+            x = jnp.asarray(x)
+            # stacked GNN leaves [L, ...]: scales per layer AND channel so
+            # lax.scan can slice the leading axis of q and scale alike
+            keep = {x.ndim - 1}
+            if "/stacked/" in f"/{key}/":
+                keep.add(0)
+            axes = tuple(i for i in range(x.ndim) if i not in keep)
+            scale = amax_scale(jnp.max(jnp.abs(x), axis=axes, keepdims=True))
+            return QuantizedLeaf(quantize_int8(x, scale), scale)
+        return x
+
+    qtree = jax.tree_util.tree_map_with_path(one, params)
+    config = None
+    if model_cfg is not None:
+        config = dict(model_cfg.to_dict(), precision="int8")
+    act_scales = {}
+    if calib_graphs is not None:
+        if model_cfg is None:
+            raise ValueError("calibration needs model_cfg")
+        act_scales = calibrate_activations(params, model_cfg, calib_graphs,
+                                           normalizer)
+    return QuantizedCostModel(qtree, act_scales=act_scales, config=config)
+
+
+def dequantize_params(qm: "QuantizedCostModel"):
+    """The f32 view of a quantized model's tree (exact: ``q * scale``)."""
+    return dequantize_tree(qm.params)
+
+
+def calibrate_activations(params, model_cfg, graphs, normalizer=None, *,
+                          node_budget: int | None = None) -> dict:
+    """Per-stage activation abs-maxes from a corpus sample, via the f32
+    sparse forward: ``"f1"`` (the embedding+f1 output entering the GNN)
+    and ``"gnn_<i>"`` per GraphSAGE hop (l2-normalized, so ≤ 1 by
+    construction — recorded anyway as the ground truth). Returns
+    {name: float amax}."""
+    from repro.core import gnn as G
+    from repro.core.model import _mask_kernel_feats
+    from repro.data.batching import iter_packed_batches
+    from repro.nn.core import dense_apply, embedding_apply
+
+    budget = node_budget or 8 * model_cfg.max_nodes
+    amaxes: dict[str, float] = {}
+
+    def note(name, x):
+        v = float(jnp.max(jnp.abs(x)))
+        amaxes[name] = max(amaxes.get(name, 0.0), v)
+
+    gnn_params = params.get("gnn")
+    layers = (G.unstack_params(gnn_params)["layers"]
+              if gnn_params is not None else [])
+    for enc, _ in iter_packed_batches(list(graphs), budget, normalizer):
+        mask = enc.node_mask
+        kfeats = _mask_kernel_feats(model_cfg, enc.kernel_feats)
+        emb = embedding_apply(params["opcode_embed"], enc.opcodes)
+        x = jnp.concatenate([emb, enc.node_feats], axis=-1)
+        if model_cfg.kernel_feat_mode == "node":
+            x = jnp.concatenate(
+                [x, jnp.take(kfeats, enc.graph_ids, axis=0)], axis=-1)
+        eps = jax.nn.relu(dense_apply(params["f1"], x)) * mask[:, None]
+        note("f1", eps)
+        if model_cfg.gnn == "graphsage":
+            for i, layer in enumerate(layers):
+                eps = G.sage_layer_apply_sparse(
+                    layer, eps, enc.edge_src, enc.edge_dst, enc.edge_mask,
+                    mask, aggregator=model_cfg.aggregator,
+                    directed=model_cfg.directed)
+                note(f"gnn_{i}", eps)
+    return amaxes
+
+
+# ----------------------------------------------------------------------------
+# The quantized model pytree
+# ----------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class QuantizedCostModel:
+    """A quantized parameter tree + its calibration + serving config.
+
+    `params` holds `QuantizedLeaf`s at the quantized positions and plain
+    f32 arrays elsewhere; it is what `cost_model_apply` consumes under
+    ``precision="int8"``. `act_scales` are `calibrate_activations`
+    abs-maxes; `config` is the serving `CostModelConfig` as a dict
+    (``precision`` already ``"int8"``).
+    """
+    params: dict
+    act_scales: dict = field(default_factory=dict)
+    config: dict | None = None
+
+    def tree_flatten(self):
+        names = tuple(sorted(self.act_scales))
+        vals = tuple(self.act_scales[n] for n in names)
+        aux = (names, json.dumps(self.config, sort_keys=True))
+        return (self.params, vals), aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        names, config = aux
+        params, vals = children
+        return cls(params, act_scales=dict(zip(names, vals)),
+                   config=json.loads(config))
+
+    def serving_config(self, base=None):
+        """The `CostModelConfig` to serve this model under (embedded
+        config if present, else `base` with ``precision="int8"``)."""
+        from repro.core.model import CostModelConfig
+        if self.config is not None:
+            return CostModelConfig.from_dict(self.config)
+        if base is None:
+            raise ValueError("no embedded config; pass the f32 model's "
+                             "CostModelConfig as base")
+        return CostModelConfig.from_dict(
+            dict(base.to_dict(), precision="int8"))
+
+    @property
+    def num_quantized(self) -> int:
+        return sum(_is_qleaf(l) for l in jax.tree_util.tree_leaves(
+            self.params, is_leaf=_is_qleaf))
+
+    def quantized_bytes(self) -> int:
+        """Parameter bytes of the quantized tree (int8 payloads + their
+        scales + the remaining f32 leaves) — the serving memory/bandwidth
+        footprint the weight-bytes benchmark gate measures."""
+        total = 0
+        for leaf in jax.tree_util.tree_leaves(self.params, is_leaf=_is_qleaf):
+            if _is_qleaf(leaf):
+                total += leaf.q.size * 1 + leaf.scale.size * 4
+            else:
+                total += np.asarray(leaf).nbytes
+        return total
+
+
+def tree_bytes(params) -> int:
+    """Total bytes of a plain parameter tree (the f32 baseline)."""
+    return int(sum(np.asarray(l).nbytes
+                   for l in jax.tree_util.tree_leaves(params)))
+
+
+# ----------------------------------------------------------------------------
+# Checkpoint sidecar (quantize once, serve anywhere)
+# ----------------------------------------------------------------------------
+def save_quantized(path: str, qm: QuantizedCostModel) -> str:
+    """Write `qm` to one npz at `path` (atomic tmp+rename, checksummed
+    header — the corpus-store / cache-snapshot idiom). Returns `path`."""
+    flat = jax.tree_util.tree_flatten_with_path(
+        qm.params, is_leaf=_is_qleaf)[0]
+    arrays: dict[str, np.ndarray] = {}
+    entries = []
+    for i, (p, leaf) in enumerate(flat):
+        key = _key_str(p)
+        if _is_qleaf(leaf):
+            arrays[f"a{i}.q"] = np.asarray(leaf.q)
+            arrays[f"a{i}.scale"] = np.asarray(leaf.scale, np.float32)
+            entries.append({"key": key, "kind": "int8", "id": f"a{i}"})
+        else:
+            arrays[f"a{i}.w"] = np.asarray(leaf)
+            entries.append({"key": key, "kind": "raw", "id": f"a{i}"})
+    digest = hashlib.sha256()
+    for name in sorted(arrays):
+        digest.update(name.encode())
+        digest.update(arrays[name].tobytes())
+    header = {"format_version": SIDECAR_VERSION,
+              "kind": "quantized_cost_model", "config": qm.config,
+              "act_scales": {k: float(v) for k, v in qm.act_scales.items()},
+              "leaves": entries, "arrays_sha256": digest.hexdigest()}
+    blob = json.dumps(header, sort_keys=True,
+                      separators=(",", ":")).encode("utf-8")
+    tmp = path + f".tmp-{os.getpid()}"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, __meta__=np.frombuffer(blob, np.uint8), **arrays)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    return path
+
+
+def _insert(root: dict, parts: list[str], value) -> None:
+    node = root
+    for a in parts[:-1]:
+        node = node.setdefault(a, {})
+    node[parts[-1]] = value
+
+
+def _listify(node):
+    """Convert {digit-string: v} dicts back into lists (the ``layers``
+    convention of the checkpoint key paths)."""
+    if not isinstance(node, dict):
+        return node
+    out = {k: _listify(v) for k, v in node.items()}
+    if out and all(k.isdigit() for k in out):
+        return [out[k] for k in sorted(out, key=int)]
+    return out
+
+
+def load_quantized(path: str) -> QuantizedCostModel:
+    """Load a `save_quantized` sidecar; bit-exact round trip (the values
+    a restored service computes are identical to the exporter's)."""
+    with np.load(path) as z:
+        header = json.loads(bytes(z["__meta__"]).decode("utf-8"))
+        if header.get("format_version") != SIDECAR_VERSION:
+            raise ValueError(
+                f"{path}: sidecar format_version "
+                f"{header.get('format_version')!r} != {SIDECAR_VERSION}")
+        arrays = {k: z[k] for k in z.files if k != "__meta__"}
+    digest = hashlib.sha256()
+    for name in sorted(arrays):
+        digest.update(name.encode())
+        digest.update(arrays[name].tobytes())
+    if digest.hexdigest() != header["arrays_sha256"]:
+        raise ValueError(f"{path}: arrays checksum mismatch")
+    root: dict = {}
+    for e in header["leaves"]:
+        parts = e["key"].split("/")
+        if e["kind"] == "int8":
+            leaf = QuantizedLeaf(jnp.asarray(arrays[e["id"] + ".q"]),
+                                 jnp.asarray(arrays[e["id"] + ".scale"]))
+        else:
+            leaf = jnp.asarray(arrays[e["id"] + ".w"])
+        _insert(root, parts, leaf)
+    return QuantizedCostModel(_listify(root),
+                              act_scales=dict(header["act_scales"]),
+                              config=header["config"])

@@ -1,0 +1,139 @@
+"""Shared int8 scale math (DESIGN.md §14).
+
+One home for the symmetric-int8 quantization primitives used by both
+
+* `training.compression` — per-leaf gradient compression for the int8
+  all-reduce (scalar scale, error feedback), and
+* `repro.quant.quantize` — per-channel weight quantization of a trained
+  cost model for int8 serving,
+
+so there is exactly one copy of ``round(x / scale).clip(-127, 127)`` in
+the tree. The symmetric scheme maps ``x ≈ q * scale`` with ``q ∈ int8``
+and no zero point: scales are always positive, zero is exactly
+representable, and dequantize∘quantize of an already-quantized array is
+the identity (`tests/test_quantization.py` pins the round trip).
+
+`QuantizedLeaf` is the pytree carrying one quantized array: ``q`` (int8)
+plus its broadcast-ready ``scale``. It flattens to its two arrays, so
+quantized parameter trees pass through `jax.jit`, `lax.scan` (the
+scan-over-layers GNN slices the leading layer axis of both fields), and
+the checkpoint sidecar writer unchanged.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+_TINY = 1e-12       # scale floor: an all-zero channel quantizes to zeros
+
+
+def amax_scale(amax: jnp.ndarray) -> jnp.ndarray:
+    """Symmetric int8 scale for a (per-tensor or per-channel) abs-max.
+
+    >>> float(amax_scale(jnp.asarray(127.0)))
+    1.0
+    >>> float(amax_scale(jnp.asarray(0.0))) > 0      # floored, never 0
+    True
+    """
+    return jnp.maximum(jnp.asarray(amax, jnp.float32) / INT8_MAX, _TINY)
+
+
+def quantize_int8(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """``clip(round(x / scale), -127, 127)`` as int8 (`scale` broadcasts;
+    ``round`` is `jnp.round`, i.e. round-half-to-even).
+
+    >>> q = quantize_int8(jnp.asarray([1.0, -0.6, 300.0]), jnp.asarray(1.0))
+    >>> q.tolist()
+    [1, -1, 127]
+    >>> q.dtype.name
+    'int8'
+    """
+    q = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX)
+    return q.astype(jnp.int8)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    """``q * scale`` in `dtype`; exact inverse on quantized values.
+
+    >>> x = jnp.asarray([0.5, -1.25, 2.0])
+    >>> s = amax_scale(jnp.max(jnp.abs(x)))
+    >>> q = quantize_int8(x, s)
+    >>> bool(jnp.array_equal(q, quantize_int8(dequantize_int8(q, s), s)))
+    True
+    """
+    return q.astype(dtype) * scale
+
+
+def per_channel_scale(w: jnp.ndarray, *, channel_axis: int = -1
+                      ) -> jnp.ndarray:
+    """Per-output-channel scales for a weight tensor: abs-max over every
+    axis except `channel_axis`, shaped for broadcasting against `w`
+    (kept dims). For a dense ``w [in, out]`` this is one scale per output
+    column — the layout `kernels/segment_aggregate` dequantizes in-VMEM.
+
+    >>> w = jnp.asarray([[1.0, -8.0], [2.0, 4.0]])
+    >>> s = per_channel_scale(w)                  # [1, 2]: col abs-maxes/127
+    >>> [round(float(v) * 127, 4) for v in s[0]]
+    [2.0, 8.0]
+    """
+    axes = tuple(i for i in range(w.ndim)
+                 if i != (channel_axis % w.ndim))
+    return amax_scale(jnp.max(jnp.abs(w), axis=axes, keepdims=True))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class QuantizedLeaf:
+    """One int8-quantized array: ``dequantize() == q * scale``."""
+    q: jnp.ndarray           # int8, the original array's shape
+    scale: jnp.ndarray       # f32, broadcastable against ``q``
+
+    def tree_flatten(self):
+        return (self.q, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    def dequantize(self, dtype=jnp.float32) -> jnp.ndarray:
+        return dequantize_int8(self.q, self.scale, dtype)
+
+    @classmethod
+    def quantize(cls, w: jnp.ndarray, *, channel_axis: int = -1
+                 ) -> "QuantizedLeaf":
+        scale = per_channel_scale(w, channel_axis=channel_axis)
+        return cls(quantize_int8(w, scale), scale)
+
+
+def _is_qleaf(x) -> bool:
+    return isinstance(x, QuantizedLeaf)
+
+
+def tree_is_quantized(tree) -> bool:
+    """True iff any leaf of `tree` is a `QuantizedLeaf`."""
+    return any(_is_qleaf(l) for l in
+               jax.tree_util.tree_leaves(tree, is_leaf=_is_qleaf))
+
+
+def dequantize_tree(tree, dtype=jnp.float32):
+    """Materialize the f32 view of a (possibly) quantized parameter tree:
+    `QuantizedLeaf`s become ``q * scale``, everything else passes through.
+    Inside jit this is the int8 serving path's whole decode cost — one
+    fused multiply per quantized leaf, while the weights live in memory
+    (and stream from it) as int8."""
+    return jax.tree_util.tree_map(
+        lambda x: x.dequantize(dtype) if _is_qleaf(x) else x,
+        tree, is_leaf=_is_qleaf)
+
+
+def leaf_f32(x, dtype=jnp.float32):
+    """`QuantizedLeaf` → dequantized array; plain arrays pass through."""
+    return x.dequantize(dtype) if _is_qleaf(x) else x

@@ -237,7 +237,13 @@ class LearnedEstimator(CostEstimator):
         predictor / cost-fn in `core.evaluate` and `repro.autotuner`
         builds through here. Pass an existing `service` to share one
         prediction cache across clients; `cache_capacity=0` (and no
-        service) opts out into direct uncached scoring."""
+        service) opts out into direct uncached scoring. `params` may be
+        a `repro.quant.QuantizedCostModel` — scoring then runs the int8
+        serving path under the model's embedded config (DESIGN.md §14)."""
+        from repro.quant.quantize import QuantizedCostModel
+        if isinstance(params, QuantizedCostModel):
+            model_cfg = params.serving_config(model_cfg)
+            params = params.params
         if service is None and cache_capacity:
             from repro.serving import CostModelService
             service = CostModelService(params, model_cfg, normalizer,

@@ -47,7 +47,11 @@ from dataclasses import dataclass
 
 import numpy as np
 
-SNAPSHOT_FORMAT_VERSION = 1
+# v1: header {format_version, kind, keys, values_sha256}
+# v2: + optional "meta" dict (model binding, e.g. {"precision": "int8"}) —
+#     restore() accepts both; a v1 file is a v2 file with empty meta
+SNAPSHOT_FORMAT_VERSION = 2
+_ACCEPTED_VERSIONS = (1, 2)
 
 
 @dataclass(frozen=True)
@@ -117,20 +121,23 @@ class PredictionCache:
                               len(self._data), self.capacity)
 
     # --- persistence (warm restarts; docs/SERVING.md §warm cache) ----------
-    def snapshot(self, path: str) -> int:
+    def snapshot(self, path: str, *, meta: dict | None = None) -> int:
         """Persist all entries to one npz at `path` (atomic: tmp sibling +
         rename, like `repro.data.store`). Returns the entry count.
 
         Layout mirrors a corpus shard: ``entries`` is a canonical-JSON
         header (format version, keys in LRU order — oldest first — and a
         sha256 over the raw value bytes), ``values`` is one float64 block,
-        JSON never touches the floats.
+        JSON never touches the floats. `meta` (string-valued, e.g. the
+        serving precision) is stamped into the header so `restore` can
+        refuse snapshots from a differently-configured model.
         """
         with self._lock:
             keys = list(self._data)
             values = np.asarray([self._data[k] for k in keys], np.float64)
         header = {"format_version": SNAPSHOT_FORMAT_VERSION,
                   "kind": "prediction_cache", "keys": keys,
+                  "meta": dict(meta or {}),
                   "values_sha256": hashlib.sha256(
                       values.tobytes()).hexdigest()}
         blob = json.dumps(header, sort_keys=True,
@@ -148,12 +155,15 @@ class PredictionCache:
             raise
         return len(keys)
 
-    def restore(self, path: str) -> int:
+    def restore(self, path: str, *, expect_meta: dict | None = None) -> int:
         """Load a `snapshot` file into this cache (entries inserted in
         stored LRU order, so recency survives the round trip; capacity
         still applies — oldest entries evict first if the snapshot is
         larger). Returns the number of entries loaded. Raises
-        `SnapshotFormatError` on a corrupt/mismatched file."""
+        `SnapshotFormatError` on a corrupt/mismatched file, or when a
+        key in `expect_meta` contradicts the snapshot's stamped meta
+        (keys absent from the snapshot — every v1 file — are accepted:
+        pre-meta snapshots predate the precision tag and are f32)."""
         try:
             with np.load(path) as z:
                 header = json.loads(bytes(z["entries"]).decode("utf-8"))
@@ -161,10 +171,17 @@ class PredictionCache:
         except (OSError, ValueError, KeyError) as e:
             raise SnapshotFormatError(f"{path}: unreadable snapshot "
                                       f"({e})") from e
-        if header.get("format_version") != SNAPSHOT_FORMAT_VERSION:
+        if header.get("format_version") not in _ACCEPTED_VERSIONS:
             raise SnapshotFormatError(
                 f"{path}: format_version {header.get('format_version')!r} "
-                f"!= {SNAPSHOT_FORMAT_VERSION}")
+                f"not in {_ACCEPTED_VERSIONS}")
+        meta = header.get("meta", {})
+        for k, want in (expect_meta or {}).items():
+            if k in meta and meta[k] != want:
+                raise SnapshotFormatError(
+                    f"{path}: snapshot meta {k}={meta[k]!r} does not match "
+                    f"this service ({k}={want!r}) — a warm cache is only "
+                    "sound for the model configuration that wrote it")
         digest = hashlib.sha256(values.tobytes()).hexdigest()
         if digest != header["values_sha256"]:
             raise SnapshotFormatError(f"{path}: values checksum mismatch")

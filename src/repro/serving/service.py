@@ -132,6 +132,13 @@ class CostModelService:
     (sparse packing budget, also the coalescer auto-flush threshold)
     defaults to `8 * max_nodes`, `chunk` is the dense batch width. Pass
     `predict_fn` to share one jitted apply across services.
+
+    `params` may also be a `repro.quant.QuantizedCostModel` (DESIGN.md
+    §14): the service then serves its int8 tree under the model's
+    embedded serving config (``precision="int8"`` — weights decode
+    inside jit, or in-VMEM on the sparse Pallas path), and stamps
+    `precision` into cache-snapshot meta so an int8 warm cache can't
+    silently warm an f32 service (or vice versa).
     """
 
     def __init__(self, params, model_cfg: CostModelConfig, normalizer, *,
@@ -140,8 +147,13 @@ class CostModelService:
                  max_nodes: int | None = None, predict_fn=None,
                  include_static_perf: bool = True):
         from repro.core.evaluate import make_predict_fn
+        from repro.quant.quantize import QuantizedCostModel
+        if isinstance(params, QuantizedCostModel):
+            model_cfg = params.serving_config(model_cfg)
+            params = params.params
         self.params = params
         self.model_cfg = model_cfg
+        self.precision = model_cfg.precision
         self.normalizer = normalizer
         self.adjacency = adjacency or model_cfg.adjacency
         if self.adjacency not in ("dense", "sparse", "segmented"):
@@ -282,13 +294,16 @@ class CostModelService:
     # path per model; these helpers just delegate to the cache.
     def snapshot_cache(self, path: str) -> int:
         """Persist the prediction cache to `path` (atomic npz; see
-        `PredictionCache.snapshot`). Returns the entry count."""
-        return self.cache.snapshot(path)
+        `PredictionCache.snapshot`), stamped with this service's
+        precision. Returns the entry count."""
+        return self.cache.snapshot(path, meta={"precision": self.precision})
 
     def restore_cache(self, path: str) -> int:
         """Warm-start the prediction cache from a `snapshot_cache` file.
-        Returns the number of entries loaded."""
-        return self.cache.restore(path)
+        Refuses (SnapshotFormatError) a snapshot stamped with a different
+        precision. Returns the number of entries loaded."""
+        return self.cache.restore(path,
+                                  expect_meta={"precision": self.precision})
 
     def stats(self) -> ServiceStats:
         buckets = {

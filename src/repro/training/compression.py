@@ -12,23 +12,29 @@ Algorithm per leaf g (inside shard_map over the data axis):
   3. s     = psum(q.int32)                     (int8 wire bytes, exact sum)
   4. ĝ     = s * scale                         (sum of replicas' gradients)
   5. e'    = g - q * scale                     (local error, fed back next step)
+
+The scale/clip/round primitives live in `repro.quant.scale` — one shared
+module with the inference-side weight quantizer (DESIGN.md §14) — so the
+int8 math here and in `repro.quant` cannot drift.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.quant.scale import amax_scale, dequantize_int8, quantize_int8
+
 
 def compress_int8(g: jnp.ndarray, scale: jnp.ndarray):
     """Quantize with a given positive scale; returns (q_int8, local_error)."""
-    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    q = quantize_int8(g, scale)
     err = g - q.astype(g.dtype) * scale
     return q, err
 
 
 def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray,
                     dtype=jnp.float32) -> jnp.ndarray:
-    return q.astype(dtype) * scale
+    return dequantize_int8(q, scale, dtype)
 
 
 def compressed_allreduce(grads, error_feedback, axis_name: str | None):
@@ -45,7 +51,7 @@ def compressed_allreduce(grads, error_feedback, axis_name: str | None):
         amax = jnp.max(jnp.abs(g))
         if axis_name is not None:
             amax = jax.lax.pmax(amax, axis_name)
-        scale = jnp.maximum(amax / 127.0, 1e-12)
+        scale = amax_scale(amax)
         q, err = compress_int8(g, scale)
         s = q.astype(jnp.int32)
         if axis_name is not None:

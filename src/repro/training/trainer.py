@@ -109,6 +109,12 @@ class CostModelTrainer:
             raise ValueError(f"dp must be >= 0 and mp >= 1, "
                              f"got dp={cfg.dp} mp={cfg.mp}")
 
+        if model_cfg.precision != "f32":
+            raise ValueError(
+                f"training runs in f32, got precision="
+                f"{model_cfg.precision!r} — train the f32 model and "
+                "quantize afterwards (repro.quant.quantize_params)")
+
         # reject dense-only config combos here rather than as a
         # NotImplementedError buried in the first step's jit trace
         if self._use_mesh and model_cfg.adjacency == "segmented":
@@ -126,8 +132,10 @@ class CostModelTrainer:
                     "adjacency='sparse' there) or use adjacency='dense'")
             if model_cfg.use_pallas_aggregate:
                 raise ValueError(
-                    "use_pallas_aggregate targets the dense [B,N,N] layout "
-                    "— use adjacency='dense' with it")
+                    "use_pallas_aggregate on the sparse layouts routes "
+                    "through kernels/segment_aggregate, which has no VJP — "
+                    "it is inference-only; train with "
+                    "use_pallas_aggregate=False (or adjacency='dense')")
             if model_cfg.gnn == "gat" and not model_cfg.directed:
                 raise ValueError(
                     "undirected GAT is dense-only (DESIGN.md §4) — use "

@@ -23,6 +23,8 @@ CURATED_MODULES = [
     "repro.data.prefetch",
     "repro.data.store",
     "repro.autotuner.tile_autotuner",
+    "repro.quant.scale",
+    "repro.quant.quantize",
     "repro.search.estimator",
     "repro.serving.cache",
     "repro.serving.coalescer",

@@ -10,6 +10,11 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.graph_aggregate.ops import graph_aggregate
 from repro.kernels.graph_aggregate.ref import graph_aggregate_ref
+from repro.kernels.segment_aggregate.ops import (
+    block_candidates,
+    segment_aggregate,
+)
+from repro.kernels.segment_aggregate.ref import segment_aggregate_ref
 from repro.kernels.ssd_scan.ops import ssd_scan
 from repro.kernels.ssd_scan.ref import ssd_scan_ref
 
@@ -110,6 +115,102 @@ def test_graph_aggregate_isolated_nodes_zero():
     out = graph_aggregate(jnp.asarray(adj), jnp.asarray(x), jnp.asarray(w),
                           interpret=True)
     assert float(jnp.max(jnp.abs(out))) == 0.0
+
+
+# ------------------------------------------------------- segment aggregate
+def _seg_inputs(M, D, F, E, *, int8=True, seed=0, integer=False):
+    """Random packed edge list + weights (int8 per-channel or f32+ones)."""
+    rng = np.random.default_rng(seed)
+    if integer:
+        x = rng.integers(-3, 4, (M, D)).astype(np.float32)
+        w = rng.integers(-5, 6, (D, F)).astype(np.int8 if int8 else np.float32)
+        scale = np.ones((1, F), np.float32)
+    else:
+        x = rng.normal(0, 1, (M, D)).astype(np.float32)
+        wf = rng.normal(0, 1, (D, F)).astype(np.float32)
+        if int8:
+            scale = np.maximum(
+                np.abs(wf).max(axis=0, keepdims=True) / 127.0, 1e-12)
+            w = np.clip(np.round(wf / scale), -127, 127).astype(np.int8)
+        else:
+            w, scale = wf, np.ones((1, F), np.float32)
+    gather = rng.integers(0, M, E).astype(np.int32)
+    scatter = rng.integers(0, M, E).astype(np.int32)
+    edge_mask = (rng.random(E) < 0.8).astype(np.float32)
+    node_mask = (rng.random(M) < 0.9).astype(np.float32)
+    return x, w, scale, gather, scatter, edge_mask, node_mask
+
+
+SEG_CASES = [
+    # (M, D, F, E, act, mean, int8)  — shapes straddle the (8, 32, 128,
+    # block_e) padding boundaries on every operand
+    (16, 12, 20, 33, "relu", True, True),
+    (64, 192, 192, 256, "relu", True, True),
+    (9, 7, 5, 3, "none", False, True),
+    (32, 32, 128, 64, "relu", False, True),
+    (24, 48, 64, 100, "relu", True, False),          # f32 weights, unit scale
+    (8, 16, 16, 512, "none", True, True),            # E >> M fan-in
+]
+
+
+@pytest.mark.parametrize("case", SEG_CASES, ids=str)
+def test_segment_aggregate_matches_ref(case):
+    M, D, F, E, act, mean, int8 = case
+    x, w, s, g, sc, em, nm = _seg_inputs(M, D, F, E, int8=int8, seed=M + E)
+    out = segment_aggregate(jnp.asarray(x), jnp.asarray(w), jnp.asarray(s),
+                            jnp.asarray(g), jnp.asarray(sc), jnp.asarray(em),
+                            jnp.asarray(nm), act=act, mean=mean,
+                            block_e=64, interpret=True)
+    ref = segment_aggregate_ref(x, w, s, g, sc, em, nm, act=act, mean=mean)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("mean", [True, False], ids=["mean", "sum"])
+def test_segment_aggregate_bitexact_on_integers(mean):
+    """Integer-valued inputs make every f32 intermediate exact, so the
+    Pallas one-hot-matmul formulation must equal the sequential edge-loop
+    oracle bit for bit — no tolerance."""
+    x, w, s, g, sc, em, nm = _seg_inputs(32, 16, 24, 96, integer=True,
+                                         seed=7)
+    out = segment_aggregate(jnp.asarray(x), jnp.asarray(w), jnp.asarray(s),
+                            jnp.asarray(g), jnp.asarray(sc), jnp.asarray(em),
+                            jnp.asarray(nm), mean=mean, interpret=True)
+    ref = segment_aggregate_ref(x, w, s, g, sc, em, nm, mean=mean)
+    assert np.array_equal(np.asarray(out), ref)
+
+
+def test_segment_aggregate_block_e_invariance():
+    """Different edge-block widths must give identical results — the
+    property the block_candidates autotuner hints rely on."""
+    args = [jnp.asarray(a) for a in _seg_inputs(24, 16, 32, 200, seed=3)]
+    outs = [segment_aggregate(*args, block_e=be, interpret=True)
+            for be in block_candidates(200) + [8]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_segment_aggregate_all_edges_masked_is_zero():
+    x, w, s, g, sc, em, nm = _seg_inputs(16, 8, 16, 40, seed=5)
+    out = segment_aggregate(jnp.asarray(x), jnp.asarray(w), jnp.asarray(s),
+                            jnp.asarray(g), jnp.asarray(sc),
+                            jnp.zeros_like(jnp.asarray(em)), jnp.asarray(nm),
+                            interpret=True)
+    assert float(jnp.max(jnp.abs(out))) == 0.0
+
+
+@given(st.integers(min_value=1, max_value=20),
+       st.integers(min_value=1, max_value=40),
+       st.booleans())
+@settings(max_examples=10, deadline=None)
+def test_segment_aggregate_property(m, e, mean):
+    x, w, s, g, sc, em, nm = _seg_inputs(m, 6, 10, e, seed=m * 41 + e)
+    out = segment_aggregate(jnp.asarray(x), jnp.asarray(w), jnp.asarray(s),
+                            jnp.asarray(g), jnp.asarray(sc), jnp.asarray(em),
+                            jnp.asarray(nm), mean=mean, block_e=32,
+                            interpret=True)
+    ref = segment_aggregate_ref(x, w, s, g, sc, em, nm, mean=mean)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5, atol=1e-5)
 
 
 # --------------------------------------------------------------- ssd scan
