@@ -10,7 +10,6 @@ model's argmin tile per kernel) for:
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import (
     MAX_NODES,

@@ -32,11 +32,9 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import features as F
 from repro.core import gnn as G
-from repro.core.losses import log_mse_loss
 from repro.core.model import CostModelConfig, cost_model_apply, \
     cost_model_init
 from repro.data import batching

@@ -8,7 +8,6 @@ distribution (the paper uses 5µs on its own; we use the median so the
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import (
     analytical_fusion_predictor,

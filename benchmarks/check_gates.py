@@ -2,13 +2,36 @@
 
 Reads the ``BENCH_<name>.json`` files written by `common.emit_json`
 (uploaded as artifacts by ci.yml), prints a gate table, and exits
-non-zero if any gate failed OR any --expect'ed report is missing (a
-benchmark that crashed before emitting must fail the job, not slip
-through). Run after the benchmark steps with ``if: always()`` so every
-report is archived even when one regresses.
+non-zero on any failure. The verdict distinguishes the three ways a run
+can go wrong, because they point at different CI steps:
 
-  python benchmarks/check_gates.py --expect batching input_pipeline \\
-      serving autotune corpus
+* ``missing report`` — an --expect'ed benchmark never emitted its JSON
+  (it crashed before its gates; look at that benchmark step's log, not
+  at this one);
+* ``malformed report`` — the JSON exists but does not parse (truncated
+  write / disk issue);
+* ``gate regression`` — the benchmark ran and a measured gate failed.
+
+With --baseline BASELINES.json each numeric gate's *margin* (distance
+from its threshold, signed so bigger is better) is also compared
+against the committed baseline:
+
+* a gate whose margin flips negative still fails as a regression (the
+  gate itself catches that);
+* a still-passing gate whose margin eroded by more than 25% prints a
+  WARN line — the early signal that a contract is about to start
+  flapping — but does not fail the job;
+* comparisons are skipped (INFO) when the report and baseline were
+  measured at different BENCH_SCALE, since margins are scale-dependent
+  (common.py §BENCH_SCALE).
+
+Boolean and ``==`` gates carry no margin and are excluded from baseline
+comparison. Refresh the baseline intentionally with --write-baseline
+after a deliberate contract change:
+
+  python benchmarks/check_gates.py --expect batching serving ...
+  python benchmarks/check_gates.py --baseline benchmarks/BASELINES.json
+  python benchmarks/check_gates.py --write-baseline benchmarks/BASELINES.json
 """
 from __future__ import annotations
 
@@ -18,6 +41,81 @@ import json
 import os
 import sys
 
+EROSION = 0.25        # warn when margin < (1 - EROSION) * baseline margin
+
+
+def gate_margin(gate: dict) -> float | None:
+    """Signed distance from the threshold (bigger = safer), or None for
+    boolean/equality gates which have no meaningful margin."""
+    op = gate.get("op", ">=")
+    if op == "==" or isinstance(gate.get("value"), bool):
+        return None
+    v, t = float(gate["value"]), float(gate["threshold"])
+    return v - t if op in (">=", ">") else t - v
+
+
+def load_reports(dir_: str) -> dict:
+    reports = {}
+    for path in sorted(glob.glob(os.path.join(dir_, "BENCH_*.json"))):
+        name = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        try:
+            with open(path) as f:
+                reports[name] = json.load(f)
+        except ValueError as e:
+            print(f"MALFORMED  {path}: {e}")
+            reports[name] = None
+    return reports
+
+
+def baseline_entries(reports: dict) -> dict:
+    """The committed-baseline form of the current reports: one entry per
+    numeric gate, keyed ``bench.gate``, recording the margin and the
+    scale it was measured at."""
+    out = {}
+    for name, doc in sorted(reports.items()):
+        if not doc:
+            continue
+        for g in doc.get("gates", []):
+            m = gate_margin(g)
+            if m is None:
+                continue
+            out[f"{name}.{g['name']}"] = {
+                "value": g["value"], "threshold": g["threshold"],
+                "op": g.get("op", ">="), "margin": round(m, 6),
+                "bench_scale": doc.get("bench_scale")}
+    return out
+
+
+def compare_baseline(reports: dict, baseline: dict) -> list[str]:
+    """Margin-erosion warnings (returned, already printed)."""
+    warns = []
+    for key, base in sorted(baseline.items()):
+        name, gname = key.split(".", 1)
+        doc = reports.get(name)
+        if not doc:
+            continue                     # missing/malformed handled already
+        gate = next((g for g in doc.get("gates", [])
+                     if g["name"] == gname), None)
+        if gate is None:
+            print(f"INFO       {key}: in baseline but not in report "
+                  "(gate renamed/removed? refresh with --write-baseline)")
+            continue
+        if doc.get("bench_scale") != base.get("bench_scale"):
+            print(f"INFO       {key}: baseline at scale "
+                  f"{base.get('bench_scale')} vs report "
+                  f"{doc.get('bench_scale')} — margin comparison skipped")
+            continue
+        m = gate_margin(gate)
+        bm = base.get("margin")
+        if m is None or bm is None or bm <= 0:
+            continue
+        if gate["passed"] and m < (1.0 - EROSION) * bm:
+            msg = (f"{key}: margin {m:.6g} is "
+                   f"{(1 - m / bm) * 100:.0f}% below baseline {bm:.6g}")
+            print(f"WARN       {msg}")
+            warns.append(msg)
+    return warns
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
@@ -26,28 +124,45 @@ def main(argv=None) -> int:
                          "or CWD)")
     ap.add_argument("--expect", nargs="*", default=[],
                     help="bench names that MUST have emitted a report")
+    ap.add_argument("--baseline", default="",
+                    help="committed BASELINES.json to compare gate margins "
+                         "against (warn on >25%% erosion; regressions "
+                         "already fail via the gates themselves)")
+    ap.add_argument("--write-baseline", default="", metavar="PATH",
+                    help="merge the current reports' gate margins into "
+                         "PATH and exit (the deliberate refresh helper)")
     args = ap.parse_args(argv)
 
-    reports = {}
-    for path in sorted(glob.glob(os.path.join(args.dir, "BENCH_*.json"))):
-        name = os.path.basename(path)[len("BENCH_"):-len(".json")]
-        try:
-            with open(path) as f:
-                reports[name] = json.load(f)
-        except ValueError as e:
-            print(f"MALFORMED  {path}: {e}")
-            reports[name] = None
+    reports = load_reports(args.dir)
 
-    failures = []
+    if args.write_baseline:
+        merged = {}
+        if os.path.exists(args.write_baseline):
+            with open(args.write_baseline) as f:
+                merged = json.load(f).get("gates", {})
+        fresh = baseline_entries(reports)
+        merged.update(fresh)
+        doc = {"comment": "committed gate-margin baseline; refresh with "
+                          "check_gates.py --write-baseline after a "
+                          "deliberate contract change",
+               "gates": merged}
+        with open(args.write_baseline, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {len(fresh)} gate baseline(s) "
+              f"({len(merged)} total) -> {args.write_baseline}")
+        return 0
+
+    missing, malformed, regressions = [], [], []
     for name in args.expect:
         if name not in reports:
             print(f"MISSING    BENCH_{name}.json — benchmark did not emit "
                   "a report (crashed before its gates?)")
-            failures.append(f"{name}: missing report")
+            missing.append(name)
 
     for name, doc in sorted(reports.items()):
         if doc is None:
-            failures.append(f"{name}: malformed report")
+            malformed.append(name)
             continue
         wall = doc.get("wall_s")
         head = (f"{name} (scale={doc.get('bench_scale')}, "
@@ -58,20 +173,46 @@ def main(argv=None) -> int:
             continue
         for g in gates:
             status = "PASS" if g["passed"] else "FAIL"
-            line = (f"{status:10s} {name}.{g['name']}: "
-                    f"{g['value']} {g['op']} {g['threshold']}")
-            print(line)
+            print(f"{status:10s} {name}.{g['name']}: "
+                  f"{g['value']} {g['op']} {g['threshold']}")
             if not g["passed"]:
-                failures.append(f"{name}.{g['name']}: "
-                                f"{g['value']} !{g['op']} {g['threshold']}")
+                regressions.append(f"{name}.{g['name']}: "
+                                   f"{g['value']} !{g['op']} "
+                                   f"{g['threshold']}")
 
-    if failures:
-        print(f"\n{len(failures)} gate failure(s):")
-        for f_ in failures:
-            print(f"  - {f_}")
+    warns = []
+    if args.baseline:
+        try:
+            with open(args.baseline) as f:
+                base = json.load(f).get("gates", {})
+        except FileNotFoundError:
+            print(f"INFO       baseline {args.baseline} not found — "
+                  "margin comparison skipped")
+            base = {}
+        warns = compare_baseline(reports, base)
+
+    if missing or malformed or regressions:
+        print("\nverdict: FAIL")
+        if missing:
+            print(f"  {len(missing)} missing report(s) — the benchmark "
+                  "crashed before emitting; check its own step log:")
+            for n in missing:
+                print(f"    - BENCH_{n}.json")
+        if malformed:
+            print(f"  {len(malformed)} malformed report(s) — JSON did "
+                  "not parse (truncated write?):")
+            for n in malformed:
+                print(f"    - BENCH_{n}.json")
+        if regressions:
+            print(f"  {len(regressions)} gate regression(s):")
+            for r in regressions:
+                print(f"    - {r}")
         return 1
-    n_gates = sum(len(d.get('gates', [])) for d in reports.values() if d)
-    print(f"\nall gates passed ({len(reports)} reports, {n_gates} gates)")
+
+    n_gates = sum(len(d.get("gates", [])) for d in reports.values() if d)
+    tail = f", {len(warns)} margin warning(s)" if warns else ""
+    print(f"\nverdict: PASS — all gates passed ({len(reports)} reports, "
+          f"{n_gates} gates{tail})")
     return 0
 
 

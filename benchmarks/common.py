@@ -56,14 +56,12 @@ import json
 import os
 import sys
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
-import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core.analytical import AnalyticalModel, fit_type_coefficients
-from repro.core.features import FeatureNormalizer, fit_normalizer
 from repro.core.hlo_import import import_arch_program
 from repro.core.model import CostModelConfig
 from repro.core.simulator import TPUSimulator

@@ -33,7 +33,6 @@ from repro.core.simulator import TPUSimulator
 from repro.data.fusion import (
     FusionDecision,
     FusionMaterializer,
-    apply_fusion,
     default_fusion,
     fusable_edges,
     random_fusion,

@@ -2,17 +2,13 @@
 produces the paper's Table-2/8 style per-program metrics."""
 from __future__ import annotations
 
-from functools import partial
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import features as F
-from repro.core.analytical import AnalyticalModel, fit_type_coefficients, \
-    predict_scaled
+from repro.core.analytical import AnalyticalModel, predict_scaled
 from repro.core.metrics import (
-    geometric_mean,
     kendall_tau,
     mape,
     program_kendall,

@@ -13,7 +13,7 @@ ranking score for the tile-size task (trained with pairwise rank loss).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, asdict
+from dataclasses import dataclass, asdict
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,7 @@ The categories mirror XLA HLO opcodes (the paper's node vocabulary).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

@@ -8,10 +8,8 @@ Four options, all mask-aware:
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.nn.core import dense_apply, dense_init
 from repro.nn.lstm import lstm_apply, lstm_init
 from repro.nn.transformer import encoder_apply, encoder_init
 

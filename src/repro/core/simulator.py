@@ -28,7 +28,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core import opset
-from repro.core.graph import KernelGraph, Node
+from repro.core.graph import KernelGraph
 
 
 @dataclass(frozen=True)

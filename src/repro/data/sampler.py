@@ -35,8 +35,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core import features as F
-from repro.core.features import FeatureNormalizer, GraphBatch, encode_batch
+from repro.core.features import FeatureNormalizer, encode_batch
 from repro.data import batching
 
 

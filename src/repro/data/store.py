@@ -60,6 +60,7 @@ import hashlib
 import io
 import json
 import os
+import re
 import shutil
 from collections import OrderedDict
 from typing import Iterable, Sequence
@@ -74,6 +75,9 @@ from repro.data.tile_dataset import TileKernelRecord
 FORMAT_VERSION = 1
 MANIFEST_NAME = "manifest.json"
 _SHARD_FMT = "shard-{:05d}.npz"
+_DELTA_MANIFEST_FMT = "delta-{:05d}.json"
+_DELTA_SHARD_FMT = "delta-{:05d}-{:05d}.npz"
+_DELTA_MANIFEST_RE = re.compile(r"^delta-(\d{5})\.json$")
 
 KINDS = ("tile", "fusion")
 
@@ -309,6 +313,98 @@ class CorpusWriter:
     def abort(self) -> None:
         shutil.rmtree(self._tmp, ignore_errors=True)
 
+    # -- delta shards (the data-flywheel append path, DESIGN.md §15) --------
+    @classmethod
+    def append_delta(cls, store_dir: str, records: Sequence, *,
+                     shard_records: int = 256, note: str = "") -> dict | None:
+        """Append `records` to a finalized store as one **delta shard set**
+        without rewriting the base: ``delta-00000-00000.npz`` … files plus
+        a chained ``delta-00000.json`` manifest.
+
+        Chaining: each delta manifest records the base's `manifest_hash`
+        plus ``prev_hash`` — the previous delta's `manifest_hash` (the base
+        hash for the first delta). `load_delta_manifests` re-verifies the
+        whole chain on read, so a delta written against a different base,
+        an out-of-order replay, or a gap in the sequence all raise
+        `CorpusFormatError` instead of silently merging.
+
+        Records are deduplicated (first occurrence wins) against the base
+        index, every prior delta, and within the batch — the same
+        `record_key` content address the base writer uses — so re-measuring
+        a kernel the corpus already holds is a no-op. Returns the delta
+        manifest, or ``None`` when every record was a duplicate (nothing is
+        written). Shard files land first and the manifest is renamed into
+        place last, so a crash mid-append leaves at worst orphan ``.npz``
+        files that the chain loader never sees (single writer assumed).
+        """
+        base = load_manifest(store_dir)
+        if base is None:
+            raise CorpusFormatError(
+                f"no readable corpus manifest in {store_dir}; "
+                "append_delta needs a finalized base store")
+        deltas = load_delta_manifests(store_dir, base)
+        kind = base["kind"]
+        seen = {e["key"] for e in base["index"]}
+        for d in deltas:
+            seen.update(e["key"] for e in d["index"])
+        packed, dropped = [], 0
+        for r in records:
+            p = pack_record(kind, r)
+            if p["key"] in seen:
+                dropped += 1
+                continue
+            seen.add(p["key"])
+            packed.append(p)
+        if not packed:
+            return None
+        seq = len(deltas)
+        shards: list[dict] = []
+        index: list[dict] = []
+        for lo in range(0, len(packed), int(shard_records)):
+            chunk = packed[lo:lo + int(shard_records)]
+            fname = _DELTA_SHARD_FMT.format(seq, len(shards))
+            path = os.path.join(store_dir, fname)
+            tmp = path + f".tmp-{os.getpid()}"
+            runtimes = np.concatenate(
+                [np.asarray(p["runtimes"], np.float64) for p in chunk])
+            blob = ("[" + ",".join(p["json"] for p in chunk)
+                    + "]").encode("utf-8")
+            with open(tmp, "wb") as f:
+                np.savez(f, records=np.frombuffer(blob, np.uint8),
+                         runtimes=runtimes)
+            os.replace(tmp, path)
+            shards.append({
+                "file": fname, "sha256": _sha256_file(path),
+                "records": len(chunk),
+                "samples": int(sum(p["samples"] for p in chunk)),
+            })
+            index.extend({"program": p["program"], "key": p["key"],
+                          "samples": p["samples"]} for p in chunk)
+        manifest = {
+            "format_version": FORMAT_VERSION,
+            "kind": kind,
+            "delta_seq": seq,
+            "base_manifest_hash": base["manifest_hash"],
+            "prev_hash": (deltas[-1]["manifest_hash"] if deltas
+                          else base["manifest_hash"]),
+            "shards": shards,
+            "index": index,
+            "note": note,
+            "stats": {
+                "records": len(index),
+                "samples": int(sum(e["samples"] for e in index)),
+                "duplicates_dropped": dropped,
+                "programs": sorted({e["program"] for e in index}),
+            },
+        }
+        manifest["manifest_hash"] = manifest_hash(manifest)
+        fname = _DELTA_MANIFEST_FMT.format(seq)
+        tmp = os.path.join(store_dir, fname + f".tmp-{os.getpid()}")
+        with open(tmp, "w") as f:
+            json.dump(manifest, f, sort_keys=True, indent=1)
+        os.replace(tmp, os.path.join(store_dir, fname))
+        return manifest
+
 
 def _looks_like_store(path: str) -> bool:
     if not os.path.isdir(path):
@@ -340,6 +436,63 @@ def load_manifest(path: str) -> dict | None:
         return m if m.get("format_version") == FORMAT_VERSION else None
     except (OSError, ValueError):
         return None
+
+
+def load_delta_manifests(path: str, base: dict | None = None) -> list[dict]:
+    """Ordered, chain-verified delta manifests of the store at `path`.
+
+    Verifies the full chain: contiguous ``delta_seq`` from 0, every
+    ``base_manifest_hash`` equal to the base's `manifest_hash`, every
+    ``prev_hash`` equal to the predecessor's `manifest_hash`, and each
+    manifest's own `manifest_hash` recomputing exactly. Any break raises
+    `CorpusFormatError` — a tampered or half-copied chain never loads.
+    Returns ``[]`` for a store with no deltas.
+    """
+    if base is None:
+        base = load_manifest(path)
+        if base is None:
+            raise CorpusFormatError(f"no readable corpus manifest in {path}")
+    seqs = sorted(int(m.group(1)) for m in
+                  (_DELTA_MANIFEST_RE.match(e) for e in os.listdir(path))
+                  if m is not None)
+    if seqs != list(range(len(seqs))):
+        raise CorpusFormatError(
+            f"{path}: delta chain is not contiguous from 0: {seqs}")
+    out: list[dict] = []
+    prev = base["manifest_hash"]
+    for seq in seqs:
+        fname = _DELTA_MANIFEST_FMT.format(seq)
+        try:
+            with open(os.path.join(path, fname)) as f:
+                m = json.load(f)
+        except (OSError, ValueError) as e:
+            raise CorpusFormatError(f"{path}/{fname}: unreadable delta "
+                                    f"manifest ({e})") from e
+        if m.get("format_version") != FORMAT_VERSION:
+            raise CorpusFormatError(f"{path}/{fname}: format version "
+                                    f"{m.get('format_version')!r}")
+        if m.get("kind") != base["kind"]:
+            raise CorpusFormatError(
+                f"{path}/{fname}: delta kind {m.get('kind')!r} does not "
+                f"match base kind {base['kind']!r}")
+        if m.get("delta_seq") != seq:
+            raise CorpusFormatError(f"{path}/{fname}: delta_seq "
+                                    f"{m.get('delta_seq')!r} != {seq}")
+        if m.get("base_manifest_hash") != base["manifest_hash"]:
+            raise CorpusFormatError(
+                f"{path}/{fname}: delta was written against base "
+                f"{str(m.get('base_manifest_hash'))[:12]}…, store base is "
+                f"{base['manifest_hash'][:12]}…")
+        if m.get("prev_hash") != prev:
+            raise CorpusFormatError(
+                f"{path}/{fname}: broken delta chain (prev_hash "
+                f"{str(m.get('prev_hash'))[:12]}… != {prev[:12]}…)")
+        if manifest_hash(m) != m.get("manifest_hash"):
+            raise CorpusFormatError(f"{path}/{fname}: manifest hash "
+                                    "mismatch (tampered delta manifest)")
+        prev = m["manifest_hash"]
+        out.append(m)
+    return out
 
 
 # ----------------------------------------------------------------------------
@@ -507,6 +660,46 @@ class StreamingCorpus(Sequence):
         _check_shard(idx, num)
         return CorpusSubset(self, range(idx, len(self), num))
 
+    # -- delta shards --------------------------------------------------------
+    def delta_manifests(self) -> list[dict]:
+        """Chain-verified delta manifests appended to this store (may be
+        empty). See `load_delta_manifests` for the verification rules."""
+        return load_delta_manifests(self.path, self.manifest)
+
+    def with_deltas(self, *, max_cached_shards: int | None = None
+                    ) -> "ChainedCorpus":
+        """Base+delta view of this store: the base records followed by
+        every delta's records in chain order. Because `append_delta`
+        dedups each delta against the base and all prior deltas with the
+        same first-wins `record_key` rule the base writer uses, this
+        stream is byte-identical to a from-scratch ``write_corpus(...,
+        dedup=True)`` rebuild over the concatenated raw record streams
+        (provided the base itself was written with ``dedup=True``) —
+        the parity `benchmarks/bench_flywheel.py` gates on.
+
+        >>> import tempfile
+        >>> from repro.data.fusion_dataset import FusionKernelRecord
+        >>> from repro.data.synthetic import random_kernel
+        >>> recs = [FusionKernelRecord(random_kernel(6, seed=s), 1e-5,
+        ...                            program=f"p{s}") for s in range(4)]
+        >>> d = tempfile.mkdtemp()
+        >>> _ = write_corpus(d, "fusion", recs[:2])
+        >>> m = CorpusWriter.append_delta(d, recs[1:])   # recs[1] is a dup
+        >>> (m["delta_seq"], m["stats"]["records"],
+        ...  m["stats"]["duplicates_dropped"])
+        (0, 2, 1)
+        >>> CorpusWriter.append_delta(d, recs[:2]) is None   # all dups
+        True
+        >>> c = StreamingCorpus.open(d).with_deltas()
+        >>> (len(c), c.record_programs)
+        (4, ['p0', 'p1', 'p2', 'p3'])
+        """
+        mcs = (self.max_cached_shards if max_cached_shards is None
+               else max_cached_shards)
+        parts = [StreamingCorpus(self.path, m, max_cached_shards=mcs)
+                 for m in self.delta_manifests()]
+        return ChainedCorpus(self, parts)
+
     # -- integrity ----------------------------------------------------------
     def verify(self) -> None:
         """Recompute every shard checksum; raises CorpusFormatError on any
@@ -526,6 +719,93 @@ def _check_shard(idx: int, num: int) -> None:
         raise ValueError(f"num shards must be >= 1, got {num}")
     if not 0 <= idx < num:
         raise ValueError(f"shard idx must be in [0, {num}), got {idx}")
+
+
+class ChainedCorpus(Sequence):
+    """Read-only base+deltas record stream (`StreamingCorpus.with_deltas`).
+
+    A sequence of dataset records: all base records first, then each
+    delta's records in chain order — exactly the first-wins dedup order a
+    from-scratch rebuild would produce. Exposes the same manifest-only
+    surface the samplers and `CorpusSubset` rely on (``record_programs``,
+    ``manifest["index"]``, `select_programs`, `shard`), so everything
+    downstream of a `StreamingCorpus` — `TileBatchSampler`,
+    `BalancedSampler`, worker sharding, `launch/train.py --from-store`
+    — consumes a chained view unchanged.
+    """
+
+    def __init__(self, base: StreamingCorpus,
+                 deltas: Sequence[StreamingCorpus]):
+        self.base = base
+        self.deltas = list(deltas)
+        self.parts: list[StreamingCorpus] = [base, *self.deltas]
+        self.kind = base.kind
+        self.path = base.path
+        self._bounds = np.cumsum([0] + [len(p) for p in self.parts])
+        index = [e for p in self.parts for e in p.manifest["index"]]
+        self.manifest = {
+            "kind": self.kind,
+            "index": index,
+            "stats": {
+                "records": len(index),
+                "samples": int(sum(e["samples"] for e in index)),
+                "programs": sorted({e["program"] for e in index}),
+            },
+        }
+
+    @property
+    def num_deltas(self) -> int:
+        return len(self.deltas)
+
+    @property
+    def chain_hash(self) -> str:
+        """Deterministic identity of the full base+delta chain (changes
+        whenever a delta is appended — the retrain trigger key)."""
+        h = hashlib.sha256()
+        for p in self.parts:
+            h.update(p.manifest["manifest_hash"].encode())
+        return h.hexdigest()
+
+    @property
+    def record_programs(self) -> list[str]:
+        return [e["program"] for e in self.manifest["index"]]
+
+    def programs(self) -> list[str]:
+        return list(self.manifest["stats"]["programs"])
+
+    def __len__(self) -> int:
+        return int(self._bounds[-1])
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [self[j] for j in range(*i.indices(len(self)))]
+        n = len(self)
+        if i < 0:
+            i += n
+        if not 0 <= i < n:
+            raise IndexError(i)
+        s = int(np.searchsorted(self._bounds, i, side="right")) - 1
+        return self.parts[s][i - int(self._bounds[s])]
+
+    def __iter__(self):
+        for p in self.parts:
+            yield from p
+
+    def select_programs(self, names) -> "CorpusSubset":
+        name_set = set(names)
+        idx = [i for i, e in enumerate(self.manifest["index"])
+               if e["program"] in name_set]
+        return CorpusSubset(self, idx)
+
+    def shard(self, idx: int, num: int) -> "CorpusSubset":
+        _check_shard(idx, num)
+        return CorpusSubset(self, range(idx, len(self), num))
+
+    def verify(self) -> None:
+        """Checksum-verify the base and every delta shard (and re-verify
+        the manifest chain, since construction already walked it)."""
+        for p in self.parts:
+            p.verify()
 
 
 class CorpusSubset(Sequence):

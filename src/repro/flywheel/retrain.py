@@ -1,0 +1,116 @@
+"""Incremental retraining: warm-start fine-tune on base+delta streams.
+
+TLP (PAPERS.md) motivates the shape of this: adapting an existing
+checkpoint on fresh measurements reaches the from-scratch model's
+quality in a fraction of the steps, which is what makes per-round
+retraining affordable inside a search loop. `fine_tune` wires the
+pieces the trainer already has — `CostModelTrainer.warm_start` (params
++ AdamW moments from the previous round's checkpoint, optimizer step
+counter reset so `AdamWConfig.warmup_steps` re-warms the LR) over a
+`TileBatchSampler` on any record sequence, typically a
+`StreamingCorpus.with_deltas()` chained view.
+
+`tile_val_loss` is the deterministic yardstick both bench gates use:
+the pairwise rank loss of deterministic predictions over a fixed set of
+sampler batches — no dropout, no step dependence, directly comparable
+across models and rounds.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.losses import pairwise_rank_loss
+from repro.core.model import CostModelConfig
+from repro.data.sampler import TileBatchSampler
+from repro.training.optim import AdamWConfig
+from repro.training.trainer import CostModelTrainer, TrainerConfig
+
+
+def tile_val_loss(params, model_cfg: CostModelConfig, sampler, *,
+                  batches: int = 8, rank_phi: str = "hinge",
+                  predict_fn=None) -> float:
+    """Mean deterministic pairwise rank loss over `sampler.batch(0..b)`.
+
+    Batch purity (`batch(step)` is a pure function of step) makes this a
+    fixed eval set: every call scores the same batches, so two models'
+    losses — or one model's loss across fine-tune rounds — are exactly
+    comparable. Pass a cached `predict_fn` (from
+    `core.evaluate.make_predict_fn`) when calling repeatedly to reuse
+    the compiled executable.
+    """
+    if predict_fn is None:
+        from repro.core.evaluate import make_predict_fn
+        predict_fn = make_predict_fn(model_cfg)
+    total = 0.0
+    for step in range(batches):
+        b = sampler.batch(step)
+        preds = predict_fn(params, b.graphs)
+        gids = getattr(b, "group_ids", np.zeros_like(b.targets, np.int32))
+        total += float(pairwise_rank_loss(
+            preds, jnp.asarray(b.targets), jnp.asarray(gids),
+            jnp.asarray(b.valid), phi=rank_phi))
+    return total / max(batches, 1)
+
+
+@dataclass
+class FineTuneResult:
+    params: dict
+    steps: int
+    from_step: int                 # checkpoint step warm-started from
+    final_train_loss: float
+    val_history: list = field(default_factory=list)   # (step, val_loss)
+
+
+def fine_tune(records, normalizer, model_cfg: CostModelConfig, *,
+              warm_start_dir: str, steps: int, ckpt_dir: str = "",
+              lr: float = 1e-3, warmup_steps: int = 20, seed: int = 0,
+              kernels_per_batch: int = 4, configs_per_kernel: int = 8,
+              reset_opt_step: bool = True, val_sampler=None,
+              eval_every: int = 0, val_batches: int = 8,
+              rank_phi: str = "hinge") -> FineTuneResult:
+    """Warm-start fine-tune the tile cost model on `records`.
+
+    `records` is any record sequence the samplers accept — in the
+    flywheel, the `with_deltas()` chained view of the measurement store.
+    Restores params + optimizer moments from the latest checkpoint in
+    `warm_start_dir`, resets the optimizer step counter (unless
+    `reset_opt_step=False`) so the LR re-warms over `warmup_steps`, and
+    trains `steps` steps from a fresh step-0 (``resume=False`` — a
+    previous round's checkpoint in `ckpt_dir` must not short-circuit the
+    run). With `val_sampler` + `eval_every`, records a
+    `tile_val_loss` trajectory in ``val_history``.
+    """
+    sampler = TileBatchSampler(
+        records, normalizer, kernels_per_batch=kernels_per_batch,
+        configs_per_kernel=configs_per_kernel,
+        max_nodes=model_cfg.max_nodes, seed=seed,
+        adjacency=("dense" if model_cfg.adjacency == "dense" else "sparse"))
+    cfg = TrainerConfig(
+        task="tile", rank_phi=rank_phi, steps=steps,
+        ckpt_every=steps, log_every=max(steps // 4, 1), seed=seed,
+        ckpt_dir=ckpt_dir,
+        optim=AdamWConfig(lr=lr, warmup_steps=warmup_steps))
+    trainer = CostModelTrainer(model_cfg, cfg, sampler)
+    from_step = trainer.warm_start(warm_start_dir,
+                                   reset_opt_step=reset_opt_step)
+    history: list = []
+    eval_fn = None
+    if val_sampler is not None and eval_every:
+        from repro.core.evaluate import make_predict_fn
+        predict = make_predict_fn(model_cfg)
+
+        def eval_fn(params, step):
+            v = tile_val_loss(params, model_cfg, val_sampler,
+                              batches=val_batches, rank_phi=rank_phi,
+                              predict_fn=predict)
+            history.append((step, v))
+            return {"val_loss": v}
+
+    res = trainer.run(resume=False, eval_fn=eval_fn, eval_every=eval_every)
+    return FineTuneResult(params=trainer.params, steps=res["step"],
+                          from_step=from_step,
+                          final_train_loss=res["loss"],
+                          val_history=history)

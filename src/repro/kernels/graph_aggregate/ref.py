@@ -3,8 +3,6 @@ explicit edge-list gather/scatter (the 'GPU-ish' formulation), so the dense
 MXU kernel is checked against an independent sparse derivation."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 

@@ -11,7 +11,6 @@ experiments/probes/*.json for §Roofline.
   PYTHONPATH=src python -m repro.launch.probes [--arch A] [--shape S]
 """
 import argparse
-import json
 import time
 import traceback
 

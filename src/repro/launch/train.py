@@ -16,6 +16,16 @@ Two sub-commands:
       PYTHONPATH=src python -m repro.launch.train cost-model \
           --task tile --from-store experiments/corpora/v1/tile
 
+    The flywheel's incremental-retrain path (DESIGN.md §15) adds
+    --deltas (train on the store's base+delta chained view) and
+    --warm-start CKPT (fine-tune from another run's checkpoint with a
+    short LR re-warmup):
+
+      PYTHONPATH=src python -m repro.launch.train cost-model \
+          --task tile --from-store experiments/corpora/v1/tile --deltas \
+          --warm-start ckpts/tile --ckpt-dir ckpts/tile_ft \
+          --steps 200 --warmup-steps 20
+
   lm — train one of the 10 assigned architectures (reduced config on CPU;
     full configs are exercised via the dry-run).
 
@@ -49,6 +59,21 @@ def train_cost_model(args) -> None:
         raise SystemExit(f"--dp must be >= 0 and --mp >= 1, "
                          f"got dp={args.dp} mp={args.mp}")
 
+    if args.deltas and not args.from_store:
+        raise SystemExit("--deltas only applies to a stored corpus; "
+                         "pass --from-store DIR")
+    if args.warm_start:
+        from repro.training.checkpoint import latest_step
+        if latest_step(args.warm_start) is None:
+            raise SystemExit(f"--warm-start: no checkpoint found in "
+                             f"{args.warm_start!r}")
+        if args.warm_start == args.ckpt_dir:
+            raise SystemExit(
+                "--warm-start must point at a DIFFERENT run's checkpoint "
+                "directory — resuming the same --ckpt-dir is the default "
+                "behaviour (drop --warm-start), and fine-tuning in place "
+                "would overwrite the checkpoint being fine-tuned from")
+
     want_kind = "tile" if args.task.startswith("tile") else "fusion"
     if args.from_store:
         from repro.data.store import StreamingCorpus
@@ -57,11 +82,17 @@ def train_cost_model(args) -> None:
             raise SystemExit(f"--from-store points at a {corpus.kind!r} "
                              f"corpus but --task {args.task} needs "
                              f"{want_kind!r}")
+        if args.deltas:
+            corpus = corpus.with_deltas()
+            print(f"chained {corpus.num_deltas} delta shard set(s) "
+                  f"(chain {corpus.chain_hash[:12]}…)")
         split = split_programs(corpus.programs(), method=args.split,
                                seed=args.seed)
         recs = corpus.select_programs(split["train"])
+        ident = (corpus.chain_hash if args.deltas
+                 else corpus.manifest_hash)
         print(f"streaming {len(recs)}/{len(corpus)} records from "
-              f"{args.from_store} (manifest {corpus.manifest_hash[:12]}…)")
+              f"{args.from_store} (manifest {ident[:12]}…)")
     else:
         sim = TPUSimulator()
         programs = generate_corpus(args.programs, seed=args.seed)
@@ -95,8 +126,15 @@ def train_cost_model(args) -> None:
                        metrics_path=args.metrics_path,
                        compress_grads=args.compress_grads,
                        dp=args.dp, mp=args.mp,
-                       optim=AdamWConfig(lr=args.lr))
+                       optim=AdamWConfig(lr=args.lr,
+                                         warmup_steps=args.warmup_steps))
     trainer = CostModelTrainer(mc, tc, sampler)
+    if args.warm_start:
+        from_step = trainer.warm_start(args.warm_start,
+                                       reset_opt_step=not args.keep_opt_step)
+        print(f"warm-started from {args.warm_start} step {from_step} "
+              f"(LR warmup {'continues' if args.keep_opt_step else 'restarts'}"
+              f", {args.warmup_steps} warmup steps)")
     res = trainer.run(resume=not args.no_resume)
     print(f"done: step={res['step']} loss={res['loss']:.5f} "
           f"wall={res['wall']:.1f}s interrupted={res['interrupted']}")
@@ -137,6 +175,24 @@ def main() -> None:
                     help="stream records from an on-disk corpus store "
                          "(one kind's directory, e.g. corpora/v1/tile) "
                          "instead of regenerating + re-measuring")
+    cm.add_argument("--deltas", action="store_true",
+                    help="with --from-store: train on the base+delta "
+                         "chained view (StreamingCorpus.with_deltas) — "
+                         "the flywheel's appended measurement shards "
+                         "included, chain-verified")
+    cm.add_argument("--warm-start", default="",
+                    help="checkpoint directory of ANOTHER run to "
+                         "fine-tune from: params + AdamW moments are "
+                         "restored, this run still starts at step 0 "
+                         "(DESIGN.md §15)")
+    cm.add_argument("--warmup-steps", type=int, default=0,
+                    help="LR warmup steps (AdamWConfig.warmup_steps); "
+                         "pair with --warm-start for the short re-warmup "
+                         "that protects a fine-tuned checkpoint")
+    cm.add_argument("--keep-opt-step", action="store_true",
+                    help="with --warm-start: keep the optimizer's step "
+                         "counter (LR schedule continues) instead of "
+                         "resetting it (warmup restarts)")
     cm.add_argument("--split", default="random",
                     choices=["random", "manual"])
     cm.add_argument("--gnn", default="graphsage")

@@ -10,7 +10,7 @@ dry-run). Pattern elements are "<mixer>+<ffn>" strings:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, asdict
+from dataclasses import dataclass, asdict
 
 
 @dataclass(frozen=True)

@@ -15,14 +15,13 @@ Entry points:
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import layers as L
-from repro.models.config import ModelConfig, Stack
+from repro.models.config import ModelConfig
 from repro.sharding.context import constrain, constrain_batch_tree
 from repro.training.optim import AdamWConfig, adamw_init, adamw_update
 from repro.training.adafactor import adafactor_init, adafactor_update

@@ -3,8 +3,10 @@
 `CostEstimator` adapters (hardware / analytical / learned / cascade) with
 shared `BudgetMeter` accounting, and the batched search engine
 (`topk_rerank`, population `anneal`) both autotuners are thin wrappers
-over.
+over. `AcquisitionEstimator` adds the MC-dropout variance head +
+budget routing of the data flywheel (DESIGN.md §15).
 """
+from repro.search.acquisition import AcquisitionEstimator, route_variance
 from repro.search.engine import (
     AnnealResult,
     RerankChoice,
@@ -23,8 +25,8 @@ from repro.search.estimator import (
 )
 
 __all__ = [
-    "AnalyticalEstimator", "AnnealResult", "BudgetExhausted", "BudgetMeter",
-    "CascadeEstimator", "CostEstimator", "HardwareEstimator",
-    "LearnedEstimator", "RerankChoice", "anneal", "score_groups",
-    "topk_rerank",
+    "AcquisitionEstimator", "AnalyticalEstimator", "AnnealResult",
+    "BudgetExhausted", "BudgetMeter", "CascadeEstimator", "CostEstimator",
+    "HardwareEstimator", "LearnedEstimator", "RerankChoice", "anneal",
+    "route_variance", "score_groups", "topk_rerank",
 ]

@@ -160,22 +160,35 @@ class CostEstimator:
 class HardwareEstimator(CostEstimator):
     """The measurement oracle as an estimator. Every kernel measured
     charges one eval to the shared `BudgetMeter` (if given); a whole
-    program measured as one config charges one eval."""
+    program measured as one config charges one eval.
+
+    `log` (anything with ``record(kernel, runtime)``, e.g.
+    `repro.flywheel.MeasurementLog`) observes every charged per-kernel
+    measurement — the data-flywheel tap that turns paid hardware evals
+    into corpus delta shards (DESIGN.md §15). `measure_program` totals
+    are NOT logged: one program eval yields a single end-to-end runtime
+    that can't be attributed back to per-kernel labels.
+    """
 
     name = "hardware"
 
     def __init__(self, sim: TPUSimulator, *, meter: BudgetMeter | None = None,
-                 runs: int = 3):
+                 runs: int = 3, log=None):
         super().__init__()
         self.sim = sim
         self.meter = meter
         self.runs = runs
+        self.log = log
 
     def _estimate(self, kernels: list[KernelGraph]) -> np.ndarray:
         if self.meter is not None:
             self.meter.charge(len(kernels))
-        return np.array([self.sim.measure(k, runs=self.runs)
-                         for k in kernels], np.float64)
+        out = np.array([self.sim.measure(k, runs=self.runs)
+                        for k in kernels], np.float64)
+        if self.log is not None:
+            for k, rt in zip(kernels, out):
+                self.log.record(k, float(rt))
+        return out
 
     def measure(self, kernel: KernelGraph) -> float:
         return float(self.estimate([kernel])[0])

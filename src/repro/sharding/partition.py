@@ -16,10 +16,8 @@ the dry-run HLO and are priced by §Roofline).
 """
 from __future__ import annotations
 
-import math
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 

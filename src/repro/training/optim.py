@@ -6,7 +6,7 @@ exponential learning-rate decay, and optional global-norm gradient clipping
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ constraint at 1000+ nodes.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

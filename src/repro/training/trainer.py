@@ -394,6 +394,53 @@ class CostModelTrainer:
         self.step = step
         return True
 
+    def warm_start(self, ckpt_dir: str, *, step: int | None = None,
+                   restore_opt: bool = True,
+                   reset_opt_step: bool = True) -> int:
+        """Initialize from ANOTHER run's checkpoint, keeping this run
+        fresh — the flywheel fine-tune path (DESIGN.md §15, TLP-style).
+
+        Unlike `maybe_resume` (which continues the same run: `self.step`
+        jumps to the checkpoint step, so a finished run is a no-op),
+        `warm_start` copies the checkpoint's params — and, with
+        `restore_opt`, the AdamW moments — but leaves ``self.step`` at 0,
+        so the full `cfg.steps` of fine-tuning actually run.
+
+        `reset_opt_step=True` (default) also zeroes the *optimizer's*
+        step counter, restarting the `AdamWConfig.warmup_steps` LR warmup
+        — the short re-warmup that keeps fresh delta gradients from
+        blowing away a good checkpoint. `reset_opt_step=False` preserves
+        the counter: the schedule continues as if training never stopped.
+        Error-feedback residuals (`opt['ef']`) are never imported — they
+        are per-device quantization carry, not model state.
+
+        Returns the checkpoint step warm-started from. Note `run`'s
+        default ``resume=True`` still prefers a checkpoint in THIS run's
+        `cfg.ckpt_dir` if one exists — pass ``resume=False`` (or a fresh
+        ckpt_dir) when fine-tuning into a new directory.
+        """
+        pick = ckpt_lib.latest_step(ckpt_dir) if step is None else step
+        if pick is None:
+            raise FileNotFoundError(
+                f"no checkpoint to warm-start from in {ckpt_dir!r}")
+        like = {"params": self.params}
+        if restore_opt:
+            like["opt"] = {k: v for k, v in self.opt_state.items()
+                           if k != "ef"}
+        state, ck_step, _ = ckpt_lib.restore_checkpoint(
+            ckpt_dir, like, step=pick,
+            shardings=self._state_shardings(like))
+        self.params = state["params"]
+        if restore_opt:
+            opt = dict(state["opt"])
+            if reset_opt_step:
+                opt["step"] = jnp.zeros_like(opt["step"])
+            if "ef" in self.opt_state:
+                opt["ef"] = self.opt_state["ef"]
+            self.opt_state = opt
+        self.step = 0
+        return ck_step
+
     # ------------------------------------------------------------------
     def run(self, steps: int | None = None, *, resume: bool = True,
             eval_fn: Callable[[dict, int], dict] | None = None,

@@ -10,13 +10,11 @@ import pytest
 from repro.core import opset
 from repro.core.graph import KernelGraph, Node
 from repro.core.simulator import TPUSimulator
-from repro.data.fusion_dataset import FusionKernelRecord, \
-    build_fusion_records
+from repro.data.fusion_dataset import build_fusion_records
 from repro.data.prefetch import Prefetcher
 from repro.data.sampler import BalancedSampler, TileBatchSampler
 from repro.data.store import (
     CorpusFormatError,
-    CorpusWriter,
     StreamingCorpus,
     load_manifest,
     record_key,

@@ -1,7 +1,6 @@
 """Distribution tests that need >1 device: run in subprocesses with
 --xla_force_host_platform_device_count (the main test process must keep
 the real single-device view, per the assignment)."""
-import json
 import os
 import subprocess
 import sys

@@ -26,6 +26,8 @@ CURATED_MODULES = [
     "repro.quant.scale",
     "repro.quant.quantize",
     "repro.search.estimator",
+    "repro.search.acquisition",
+    "repro.flywheel.log",
     "repro.serving.cache",
     "repro.serving.coalescer",
     "repro.serving.server",

@@ -18,7 +18,6 @@ from repro.data.fusion_dataset import build_fusion_dataset
 from repro.data.sampler import BalancedSampler, ShardPlanner, TileBatchSampler
 from repro.data.synthetic import FAMILIES, generate_corpus, generate_program
 from repro.data.tile_dataset import build_tile_dataset, enumerate_tiles
-from repro.core.features import fit_normalizer
 
 
 def test_generator_deterministic():

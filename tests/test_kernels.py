@@ -1,6 +1,5 @@
 """Per-kernel validation: shape/dtype sweeps against ref.py oracles,
 interpret=True (CPU container; TPU is the lowering target)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

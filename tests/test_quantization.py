@@ -3,7 +3,6 @@ int8-vs-f32 prediction fidelity (rank correlation), the fused Pallas
 sparse path vs the jnp path, the checkpoint sidecar, serving integration
 (QuantizedCostModel backends, snapshot meta binding), and the config /
 trainer validation guards."""
-import os
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +16,6 @@ from repro.core.model import CostModelConfig, cost_model_apply, \
 from repro.data import batching
 from repro.data.synthetic import random_kernel
 from repro.quant.quantize import (
-    QuantizedCostModel,
     calibrate_activations,
     dequantize_params,
     load_quantized,
@@ -29,7 +27,6 @@ from repro.quant.scale import (
     QuantizedLeaf,
     amax_scale,
     dequantize_int8,
-    dequantize_tree,
     per_channel_scale,
     quantize_int8,
     tree_is_quantized,

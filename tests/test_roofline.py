@@ -1,6 +1,5 @@
 """Roofline machinery tests: HLO collective parser, MODEL_FLOPS, probe
 extrapolation algebra, fused-memory estimate sanity."""
-import numpy as np
 import pytest
 
 from repro.launch.lowering import _shape_bytes, collective_bytes_from_hlo

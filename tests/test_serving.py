@@ -8,7 +8,7 @@ import pytest
 
 from repro.core import features as F
 from repro.core import opset
-from repro.core.evaluate import make_predict_fn, predict_kernels
+from repro.core.evaluate import predict_kernels
 from repro.core.graph import KernelGraph, Node
 from repro.core.model import CostModelConfig, cost_model_init
 from repro.data.synthetic import random_kernel

@@ -1,5 +1,4 @@
 """Measurement-oracle and analytical-baseline behavior tests."""
-import numpy as np
 import pytest
 
 from repro.core import opset
@@ -8,7 +7,6 @@ from repro.core.analytical import AnalyticalModel, fit_type_coefficients, \
 from repro.core.graph import KernelGraph, Node
 from repro.core.simulator import (
     TPUSimulator,
-    V5E,
     default_tile,
     tile_fits_vmem,
     tile_stats,

@@ -6,7 +6,6 @@ import numpy as np
 import pytest
 
 from repro.core import features as F
-from repro.core import gnn as G
 from repro.core.model import CostModelConfig, cost_model_apply, \
     cost_model_init
 from repro.data import batching

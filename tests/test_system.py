@@ -19,7 +19,6 @@ from repro.core.evaluate import (
     make_predict_fn,
     predict_kernels,
 )
-from repro.core.features import fit_normalizer
 from repro.core.hlo_import import import_arch_program
 from repro.core.model import CostModelConfig
 from repro.core.simulator import TPUSimulator

@@ -25,7 +25,6 @@ from repro.training.compression import (
     compress_int8,
     compressed_allreduce,
     decompress_int8,
-    zeros_like_error,
 )
 from repro.training.optim import (
     AdamWConfig,
@@ -301,7 +300,6 @@ def test_checkpoint_cross_layout_restore_bit_exact(tmp_path):
 def test_trainer_segmented_whole_model_runs(tmp_path):
     """End-to-end: whole-model graphs -> segmented batches -> trainer loss
     is finite and checkpoints round-trip in the scan layout."""
-    from repro.core.model import cost_model_apply, cost_model_init
     from repro.data.sampler import BalancedSampler
     from repro.data.synthetic import whole_model_records
     recs = whole_model_records(3, 300, seed=0)
